@@ -1,0 +1,25 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3):
+    """Median wall time in microseconds of fn(*args) (jit-compatible:
+    blocks on result)."""
+    import jax
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,220 @@
+"""Paper-figure reproductions driven by the synthetic fleet.
+
+- Fig 7  : day-ahead APE distributions (forecast quality)
+- Fig 3/8: single-cluster load shaping (VCC vs carbon intensity)
+- Fig 9-11: cluster regimes X (predictable) / Y (uncertain) / Z (small flex)
+- Fig 12 : randomized controlled experiment — power drop in peak-carbon
+           hours on treated vs control cluster-days (paper: 1-2%)
+- [20]   : PD power-model MAPE (<5% for >95% of PDs)
+- §III-B3: carbon-forecast MAPE band (0.4% - 26%)
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core import carbon, fleet as F, forecast, power, slo
+
+
+def _fleet(n_clusters=16, days=10, seed=1, lambda_e=0.5):
+    cfg = F.FleetConfig(n_clusters=n_clusters, n_campuses=4, n_zones=4,
+                        lambda_e=lambda_e, seed=seed)
+    st = F.init_fleet(cfg)
+    recs = []
+    for _ in range(days):
+        rec = {}
+        t0 = time.perf_counter()
+        st = F.day_cycle(st, rec)
+        rec["wall_s"] = time.perf_counter() - t0
+        recs.append(rec)
+    return cfg, st, recs
+
+
+def fig7_forecast_ape(st, recs):
+    """APE of day-ahead U_IF / T_UF / T_R forecasts on operating days."""
+    rows = []
+    uif_apes, tuf_apes, tr_apes = [], [], []
+    for rec in recs:
+        fc = rec["fc"]
+        res = rec["result"]
+        act_uif = np.asarray(st.hist_uif[:, -1])  # imperfect but recent
+        uif_apes.append(np.abs(np.asarray(fc["uif"]) - act_uif)
+                        / np.clip(act_uif, 1e-6, None))
+        tuf_apes.append(np.abs(np.asarray(fc["tuf"])
+                               - np.asarray(res.served))
+                        / np.clip(np.asarray(res.served), 1e-6, None))
+        tr_apes.append(np.abs(np.asarray(fc["tr"])
+                              - np.asarray(res.reservations.sum(1)))
+                       / np.clip(np.asarray(res.reservations.sum(1)),
+                                 1e-6, None))
+    uif = np.stack(uif_apes)       # (days, n, 24)
+    med_uif = np.median(uif, axis=(0, 2))
+    frac_uif = (med_uif < 0.10).mean()
+    med_tuf = np.median(np.stack(tuf_apes), axis=0)
+    med_tr = np.median(np.stack(tr_apes), axis=0)
+    rows.append(("fig7_uif_median_ape_lt10pct_clusters", frac_uif,
+                 f"paper: >0.9; median APE={np.median(med_uif):.3f}"))
+    rows.append(("fig7_tr_median_ape", float(np.median(med_tr)),
+                 "paper: <10% for >90% clusters"))
+    rows.append(("fig7_tuf_median_ape", float(np.median(med_tuf)),
+                 "paper: flexible noisier than inflexible"))
+    return rows
+
+
+def fig3_load_shaping(st, recs):
+    """Shaped clusters: flexible load moved out of peak-carbon hours."""
+    moved, corr = [], []
+    for rec in recs:
+        sol, eta = rec["sol"], rec["intensity"]
+        for c in np.nonzero(np.asarray(sol.shaped))[0]:
+            d = np.asarray(sol.delta[c])
+            if d.std() < 1e-6:
+                continue
+            moved.append(0.5 * np.abs(d).sum() / 24.0)
+            corr.append(np.corrcoef(d, np.asarray(eta[c]))[0, 1])
+    return [("fig3_flex_fraction_shifted", float(np.mean(moved)),
+             "fraction of daily flexible usage moved between hours"),
+            ("fig3_delta_carbon_corr", float(np.mean(corr)),
+             "expect strongly negative (shift away from dirty hours)")]
+
+
+def fig9_11_cluster_regimes(st, recs):
+    """VCC headroom vs load: predictable vs uncertain vs small-flex.
+    X = shaped cluster with the LEAST headroom (tight forecasts),
+    Y = shaped cluster with the most headroom among meaningfully-shaped
+    ones (uncertain forecasts inflate the VCC), Z = smallest flexible
+    share. Headroom is capped to exclude capacity-VCC (unshaped) rows."""
+    rec = recs[-1]
+    sol, res = rec["sol"], rec["result"]
+    vcc = np.asarray(rec["vcc"])
+    demand = np.asarray(res.reservations)
+    headroom = vcc.sum(1) / np.clip(demand.sum(1), 1e-6, None) - 1.0
+    flex_share = np.asarray(res.usage_flex.sum(1)) \
+        / np.clip(np.asarray(res.usage_total.sum(1)), 1e-6, None)
+    delta_active = np.asarray(jnp.std(sol.delta, axis=1)) > 1e-4
+    shaped = np.asarray(sol.shaped) & delta_active & (headroom < 2.0) \
+        & (headroom > 0.0)
+    if not shaped.any():
+        shaped = np.asarray(sol.shaped)
+    x = int(np.argmin(np.where(shaped, headroom, np.inf)))
+    y = int(np.argmax(np.where(shaped, headroom, -np.inf)))
+    z = int(np.argmin(flex_share))
+    out = []
+    for label, c, note in (("X_predictable", x, "paper: VCC ~18% above "
+                            "load, sustained midday drop"),
+                           ("Y_uncertain", y, "paper: VCC ~33% above load, "
+                            "shorter drop"),
+                           ("Z_small_flex", z, "paper: no meaningful "
+                            "shaping")):
+        drop = 0.0
+        eta = np.asarray(rec["intensity"][c])
+        dirty = eta >= np.quantile(eta, 0.75)
+        use = np.asarray(res.usage_flex[c])
+        if use.mean() > 1e-6:
+            drop = 1.0 - use[dirty].mean() / max(use.mean(), 1e-9)
+        out.append((f"fig9_11_{label}_headroom", float(headroom[c]),
+                    f"flex_drop_dirty_hours={drop:.2f}; {note}"))
+    return out
+
+
+def fig12_controlled_experiment(n_clusters=16, days=12, seed=5):
+    """Randomized cluster-day treatment; compare mean normalized power in
+    the top-carbon hours of treated vs control."""
+    cfg = F.FleetConfig(n_clusters=n_clusters, n_campuses=4, n_zones=4,
+                        lambda_e=0.8, seed=seed)
+    st = F.init_fleet(cfg)
+    rng = np.random.RandomState(0)
+    treated_power, control_power = [], []
+    for d in range(days):
+        rec = {}
+        treat = jnp.asarray(rng.rand(n_clusters) < 0.5)
+        # shape only the treated clusters this day
+        power_fn, slope_fn, _ = F.make_power_fn(st)
+        fc = F.day_forecasts(st)
+        _, _, eta_act, eta_fc = F.carbon_forecast_next(st, st.day)
+        prob = F.build_problem(st, fc, eta_fc, power_fn, slope_fn)
+        from repro.core import vcc as V
+        sol = V.solve_vcc(prob)
+        gate = st.shaping_allowed & sol.shaped & treat
+        vcc_curve = jnp.where(gate[:, None], sol.vcc,
+                              st.capacity[:, None] * 10.0)
+        st.hist_tr_pred = jnp.concatenate(
+            [st.hist_tr_pred[:, 1:], fc["tr"][:, None]], axis=1)
+        st.hist_uif_pred = jnp.concatenate(
+            [st.hist_uif_pred[:, 1:], fc["uif"][:, None]], axis=1)
+        st, res, intensity = F._observe_day(st, st.day, True, vcc_curve,
+                                            collect=True)
+        new_slo, allowed = slo.update(st.slo_state, cfg.slo,
+                                      res.reservations.sum(1),
+                                      vcc_curve.sum(1), res.unmet)
+        st.slo_state, st.shaping_allowed = new_slo, allowed
+        p = np.asarray(res.power)
+        e = np.asarray(intensity)
+        pn = p / p.mean(axis=1, keepdims=True)        # normalized power
+        dirty = e >= np.quantile(e, 0.75, axis=1, keepdims=True)
+        for c in range(n_clusters):
+            val = pn[c][dirty[c]].mean()
+            (treated_power if bool(treat[c]) else control_power).append(val)
+    t, c = np.mean(treated_power), np.mean(control_power)
+    drop_pct = (c - t) / c * 100.0
+    return [("fig12_peak_carbon_power_drop_pct", float(drop_pct),
+             f"paper: 1-2%; treated={t:.4f} control={c:.4f} "
+             f"n=({len(treated_power)},{len(control_power)})")]
+
+
+def power_model_mape(seed=0, n_pd=64):
+    key = jax.random.PRNGKey(seed)
+    truth = power.PDTruth(
+        idle_kw=60 + 40 * jax.random.uniform(jax.random.fold_in(key, 1),
+                                             (n_pd,)),
+        slope_kw=250 + 150 * jax.random.uniform(jax.random.fold_in(key, 2),
+                                                (n_pd,)),
+        curve=0.8 + 0.5 * jax.random.uniform(jax.random.fold_in(key, 3),
+                                             (n_pd,)))
+    cpu = 0.15 + 0.7 * jax.random.uniform(jax.random.fold_in(key, 4),
+                                          (n_pd, 24 * 28))
+    pw = power.simulate_pd_power(jax.random.fold_in(key, 5), truth, cpu)
+    coef, breaks = power.fit_pd_models(cpu, pw)
+    mapes = np.asarray(power.daily_mape_b(coef, breaks, cpu, pw))
+    return [("power_model_pd_mape_lt5pct", float((mapes < 0.05).mean()),
+             f"paper [20]: >0.95; worst={mapes.max():.4f}")]
+
+
+def carbon_forecast_mape(days=40):
+    zones = carbon.default_zones(6)
+    out = []
+    mapes = []
+    for i, z in enumerate(zones):
+        key = jax.random.PRNGKey(100 + i)
+        hist = carbon.simulate_zone(key, z, days)
+        ms = []
+        for d in range(days - 8, days - 1):
+            fc = carbon.forecast_day_ahead(jax.random.fold_in(key, d),
+                                           hist[:d], hist[d],
+                                           z.weather_vol * 0.15)
+            ms.append(float(carbon.mape(fc, hist[d])))
+        mapes.append(np.mean(ms))
+    return [("carbon_forecast_mape_min", float(np.min(mapes)),
+             "paper band: 0.4%-26%"),
+            ("carbon_forecast_mape_max", float(np.max(mapes)),
+             f"zones={['%.3f' % m for m in mapes]}")]
+
+
+def run():
+    rows = []
+    t0 = time.perf_counter()
+    cfg, st, recs = _fleet()
+    cyc = np.mean([r["wall_s"] for r in recs])
+    rows.append(("fleet_day_cycle_wall_s", cyc * 1e6 / 1e6,
+                 f"{cfg.n_clusters} clusters, full pipeline"))
+    rows += fig7_forecast_ape(st, recs)
+    rows += fig3_load_shaping(st, recs)
+    rows += fig9_11_cluster_regimes(st, recs)
+    rows += fig12_controlled_experiment()
+    rows += power_model_mape()
+    rows += carbon_forecast_mape()
+    return rows

@@ -1,0 +1,57 @@
+"""Aggregate the dry-run JSONs into the roofline table (EXPERIMENTS.md
+§Roofline reads from this)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def load_records(mesh: str = "pod"):
+    recs = []
+    for p in sorted(RESULTS.glob(f"*_{mesh}.json")):
+        r = json.loads(p.read_text())
+        recs.append(r)
+    return recs
+
+
+def markdown_table(mesh: str = "pod") -> str:
+    rows = ["| arch | shape | dominant | compute_s | memory_s | coll_s | "
+            "roofline_frac | useful_flops | fits16G |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in load_records(mesh):
+        if "skipped" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | SKIP | - | - | - "
+                        f"| - | - | - |")
+            continue
+        if "error" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | - | - | - "
+                        f"| - | - | - |")
+            continue
+        t = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['dominant']} "
+            f"| {t['compute_s']:.3e} | {t['memory_s']:.3e} "
+            f"| {t['collective_s']:.3e} | {t['roofline_fraction']:.3f} "
+            f"| {r['useful_flop_ratio']:.2f} "
+            f"| {r['memory']['fits_16g']} |")
+    return "\n".join(rows)
+
+
+def run():
+    rows = []
+    for mesh in ("pod", "multipod"):
+        recs = [r for r in load_records(mesh) if "roofline" in r]
+        if not recs:
+            continue
+        ok = len(recs)
+        fits = sum(1 for r in recs if r["memory"]["fits_16g"])
+        frac = sum(r["roofline"]["roofline_fraction"] for r in recs) / ok
+        rows.append((f"dryrun_{mesh}_cells_ok", float(ok),
+                     f"fits16G={fits}/{ok} mean_roofline_frac={frac:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print(markdown_table("pod"))

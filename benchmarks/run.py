@@ -1,0 +1,25 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows (us_per_call doubles as the metric value for non-timing rows).
+import sys
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    from benchmarks import fleet_bench, optimizer_scale, roofline_table
+    print("name,us_per_call,derived")
+    all_rows = []
+    for mod in (fleet_bench, optimizer_scale, roofline_table):
+        try:
+            all_rows += mod.run()
+        except Exception as e:  # noqa: BLE001
+            all_rows.append((f"{mod.__name__}_FAILED", -1.0,
+                             f"{type(e).__name__}: {e}"))
+    for name, val, derived in all_rows:
+        d = str(derived).replace(",", ";")
+        print(f"{name},{float(val):.4f},{d}")
+    print(f"total_wall_s,{time.time() - t0:.1f},benchmark harness runtime")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,16 @@
+"""Carbon-aware batched serving: flexible batch-inference requests are
+admitted under a VCC-derived gate while the model decodes with a KV cache.
+
+    PYTHONPATH=src python examples/serve_shaped.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch import serve  # noqa: E402
+
+if __name__ == "__main__":
+    serve.main(["--arch", "qwen3-0.6b", "--smoke", "--batch", "4",
+                "--prompt-len", "24", "--gen", "16", "--rounds", "4",
+                "--carbon-aware"])

@@ -1,0 +1,117 @@
+"""Sharded checkpoint/restore with atomic commit + mesh-elastic restore.
+
+Layout (one directory per step):
+
+    <dir>/step_000123/
+        manifest.json       # tree structure, shapes, dtypes, step
+        arrays/<idx>.npy    # one file per leaf (host-local full arrays)
+        COMMIT              # written last — a checkpoint without it is
+                            # ignored (crash-safe atomicity)
+
+Restore is mesh-agnostic: leaves are saved unsharded (gathered) with their
+logical shapes, and `restore` re-device_puts them under whatever shardings
+the (possibly different-size) new mesh prescribes — elastic scaling.
+A background thread makes `save` non-blocking (async checkpointing).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _to_savable(x: np.ndarray) -> np.ndarray:
+    """numpy can't serialize ml_dtypes (bf16 etc.); view as uint bits."""
+    if x.dtype == ml_dtypes.bfloat16:
+        return x.view(np.uint16)
+    return x
+
+
+def _from_savable(x: np.ndarray, dtype: str) -> np.ndarray:
+    if dtype == "bfloat16":
+        return x.view(ml_dtypes.bfloat16)
+    return x
+
+
+def save(ckpt_dir, step: int, tree, *, keep: int = 3,
+         async_: bool = False) -> Optional[threading.Thread]:
+    """Write a checkpoint. async_=True returns the writer thread."""
+    ckpt_dir = Path(ckpt_dir)
+    leaves, treedef = _flatten(tree)
+    host_leaves = [np.asarray(x) for x in leaves]
+    treedef_str = str(treedef)
+
+    def _write():
+        final = ckpt_dir / f"step_{step:08d}"
+        tmp = ckpt_dir / f".tmp_step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        (tmp / "arrays").mkdir(parents=True)
+        manifest = {"step": step, "treedef": treedef_str,
+                    "leaves": [{"shape": list(x.shape),
+                                "dtype": str(x.dtype)}
+                               for x in host_leaves]}
+        for i, x in enumerate(host_leaves):
+            np.save(tmp / "arrays" / f"{i}.npy", _to_savable(x))
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        (tmp / "COMMIT").write_text("ok")
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        _gc(ckpt_dir, keep)
+
+    if async_:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    _write()
+    return None
+
+
+def _gc(ckpt_dir: Path, keep: int):
+    steps = sorted(p for p in ckpt_dir.glob("step_*") if
+                   (p / "COMMIT").exists())
+    for p in steps[:-keep]:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = sorted(int(p.name.split("_")[1]) for p in ckpt_dir.glob("step_*")
+                   if (p / "COMMIT").exists())
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir, step: int, example_tree, shardings=None):
+    """Load leaves and place them under `shardings` (or uncommitted)."""
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    assert (d / "COMMIT").exists(), f"uncommitted checkpoint {d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    leaves, treedef = _flatten(example_tree)
+    assert len(leaves) == len(manifest["leaves"]), "tree structure changed"
+    out = []
+    sh_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                 if shardings is not None else [None] * len(leaves))
+    for i, (ref, sh) in enumerate(zip(leaves, sh_leaves)):
+        x = np.load(d / "arrays" / f"{i}.npy")
+        x = _from_savable(x, manifest["leaves"][i]["dtype"])
+        assert tuple(x.shape) == tuple(ref.shape), (i, x.shape, ref.shape)
+        if sh is not None:
+            out.append(jax.device_put(x, sh))
+        else:
+            out.append(jax.device_put(x.astype(ref.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,13 @@
+"""CICS — Carbon-Intelligent Compute management (the paper's contribution).
+
+Pipelines (paper Fig. 4): carbon fetching (carbon.py), power models
+(power.py), load forecasting (forecast.py), risk-aware VCC optimization
+(vcc.py), SLO violation detection (slo.py), Borg-like admission under VCCs
+(admission.py), fleet orchestration (fleet.py), and the beyond-paper spatial
+shifting extension (spatial.py).
+"""
+from repro.core import (admission, carbon, fleet, forecast, power, slo,
+                        spatial, vcc)
+
+__all__ = ["admission", "carbon", "fleet", "forecast", "power", "slo",
+           "spatial", "vcc"]

@@ -1,0 +1,365 @@
+"""Fleet synthesis + the CICS day cycle (paper Fig. 4/5).
+
+Ties the pipelines together exactly as deployed: every simulated day,
+
+  1. carbon pipeline     — fetch day-ahead intensity forecasts per zone
+  2. power pipeline      — refit piecewise-linear power models on history
+  3. forecasting         — day-ahead U_IF(h), T_UF(d), T_R(d), R(h),
+                           trailing-error quantiles -> Theta, alpha (eq. 3)
+  4. optimization        — fleetwide risk-aware VCCs (eq. 4)
+  5. SLO gate + feedback — paused clusters get VCC = machine capacity
+  6. real time           — Borg-like admission under the VCC on ACTUAL load
+  7. telemetry           — roll histories; update SLO state
+
+The fleet itself is synthetic but calibrated: cluster-level day-ahead APE
+distributions match the bands of paper Fig. 7 (see benchmarks/).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import admission, carbon, forecast, power, slo, vcc
+
+f32 = jnp.float32
+HIST_DAYS = 91            # 13 weeks of rolling history
+
+
+@dataclass(frozen=True)
+class FleetConfig:
+    n_clusters: int = 48
+    n_campuses: int = 6
+    n_zones: int = 6
+    pds_per_cluster: int = 4
+    gamma: float = 0.05           # power-capping violation prob
+    lambda_e: float = 0.08
+    lambda_p: float = 0.05
+    seed: int = 0
+    slo: slo.SLOConfig = field(default_factory=slo.SLOConfig)
+
+
+@dataclass
+class FleetState:
+    cfg: FleetConfig
+    day: int
+    # static cluster structure
+    capacity: jnp.ndarray            # (n,)
+    campus: jnp.ndarray              # (n,) int
+    zone_of_campus: np.ndarray       # (n_campuses,)
+    campus_limit: jnp.ndarray        # (n_campuses,) kW
+    u_pow_cap: jnp.ndarray           # (n,)
+    # latent truth for synthesis
+    truth: Dict[str, jnp.ndarray]
+    pd_truth: power.PDTruth
+    lam: jnp.ndarray                 # (n, pds) usage fractions
+    # rolling history (oldest first)
+    hist_uif: jnp.ndarray            # (n, HIST, 24)
+    hist_flex_daily: jnp.ndarray     # (n, HIST)
+    hist_res_daily: jnp.ndarray      # (n, HIST)
+    hist_usage: jnp.ndarray          # (n, HIST, 24) total usage
+    hist_res: jnp.ndarray            # (n, HIST, 24) total reservations
+    hist_tr_pred: jnp.ndarray        # (n, HIST) past T_R predictions
+    hist_uif_pred: jnp.ndarray       # (n, HIST, 24) past U_IF predictions
+    carbon_hist: jnp.ndarray         # (zones, HIST, 24)
+    queue: jnp.ndarray               # (n,)
+    slo_state: Dict[str, jnp.ndarray]
+    shaping_allowed: jnp.ndarray     # (n,) bool
+    zones: Tuple[carbon.ZoneConfig, ...] = ()
+
+
+# --------------------------------------------------------------- synthesis
+
+def _cluster_truth(key, cfg: FleetConfig):
+    """Latent per-cluster load-generating processes."""
+    n = cfg.n_clusters
+    ks = jax.random.split(key, 10)
+    capacity = jnp.exp(jax.random.normal(ks[0], (n,)) * 0.4 + 2.3)  # ~10 CPU
+    flex_share = jnp.clip(0.08 + 0.5 * jax.random.uniform(ks[1], (n,)),
+                          0.05, 0.6)
+    base_if = capacity * (0.35 + 0.2 * jax.random.uniform(ks[2], (n,)))
+    diurnal_amp = 0.15 + 0.2 * jax.random.uniform(ks[3], (n,))
+    peak_hour = 8.0 + 10.0 * jax.random.uniform(ks[4], (n,))
+    weekly_amp = 0.05 + 0.1 * jax.random.uniform(ks[5], (n,))
+    noise = 0.02 + 0.06 * jax.random.uniform(ks[6], (n,))
+    arr_level = capacity * flex_share * (0.5 + 0.4 *
+                                         jax.random.uniform(ks[7], (n,)))
+    ratio_a = 1.15 + 0.3 * jax.random.uniform(ks[8], (n,))
+    ratio_b = -0.05 - 0.08 * jax.random.uniform(ks[9], (n,))
+    return {"capacity": capacity, "flex_share": flex_share,
+            "base_if": base_if, "diurnal_amp": diurnal_amp,
+            "peak_hour": peak_hour, "weekly_amp": weekly_amp,
+            "noise": noise, "arr_level": arr_level,
+            "ratio_a": ratio_a, "ratio_b": ratio_b}
+
+
+def _sample_inflexible(key, truth, day):
+    """Actual inflexible hourly usage for one day. (n, 24)."""
+    hours = jnp.arange(24, dtype=f32)
+    d = jnp.minimum(jnp.abs(hours[None] - truth["peak_hour"][:, None]),
+                    24 - jnp.abs(hours[None] - truth["peak_hour"][:, None]))
+    diurnal = 1.0 + truth["diurnal_amp"][:, None] * jnp.exp(
+        -0.5 * (d / 4.0) ** 2)
+    weekly = 1.0 + truth["weekly_amp"][:, None] * jnp.cos(
+        2 * jnp.pi * (day % 7) / 7.0)
+    eps = 1.0 + truth["noise"][:, None] * jax.random.normal(
+        key, (truth["base_if"].shape[0], 24))
+    return truth["base_if"][:, None] * diurnal * weekly * eps
+
+
+def _sample_arrivals(key, truth, day):
+    """Flexible CPU-hour arrivals per hour. (n, 24)."""
+    hours = jnp.arange(24, dtype=f32)
+    prof = 0.6 + 0.8 * jnp.exp(-0.5 * ((hours[None] - 11.0) / 5.0) ** 2)
+    weekly = 1.0 + 0.5 * truth["weekly_amp"][:, None] * jnp.cos(
+        2 * jnp.pi * (day % 7) / 7.0)
+    eps = 1.0 + 2.5 * truth["noise"][:, None] * jax.random.normal(
+        key, (truth["arr_level"].shape[0], 24))
+    return jnp.clip(truth["arr_level"][:, None] * prof * weekly * eps / 24.0
+                    * 24.0 / prof.sum() * 24.0, 0.0, None)
+
+
+def _true_ratio(truth, usage):
+    return jnp.clip(truth["ratio_a"][:, None]
+                    + truth["ratio_b"][:, None]
+                    * jnp.log(jnp.clip(usage, 1e-6, None)), 1.05, 3.0)
+
+
+def init_fleet(cfg: FleetConfig) -> FleetState:
+    key = jax.random.PRNGKey(cfg.seed)
+    ks = jax.random.split(key, 8)
+    n = cfg.n_clusters
+    truth = _cluster_truth(ks[0], cfg)
+    zones = carbon.default_zones(cfg.n_zones)
+    zone_of_campus = np.arange(cfg.n_campuses) % cfg.n_zones
+    campus = jnp.asarray(np.arange(n) % cfg.n_campuses, jnp.int32)
+    # PD power truth
+    npd = n * cfg.pds_per_cluster
+    pd_truth = power.PDTruth(
+        idle_kw=60.0 + 40.0 * jax.random.uniform(ks[1], (npd,)),
+        slope_kw=250.0 + 150.0 * jax.random.uniform(ks[2], (npd,)),
+        curve=0.8 + 0.5 * jax.random.uniform(ks[3], (npd,)),
+    )
+    lam = jax.nn.softmax(jax.random.normal(ks[4], (n, cfg.pds_per_cluster)),
+                         axis=1)
+    # carbon history
+    zone_hist = jnp.stack([carbon.simulate_zone(jax.random.fold_in(ks[5], i),
+                                                z, HIST_DAYS)
+                           for i, z in enumerate(zones)])
+    state = FleetState(
+        cfg=cfg, day=HIST_DAYS,
+        capacity=truth["capacity"], campus=campus,
+        zone_of_campus=zone_of_campus,
+        campus_limit=jnp.full((cfg.n_campuses,), 0.0),
+        u_pow_cap=truth["capacity"] * 0.95,
+        truth=truth, pd_truth=pd_truth, lam=lam,
+        hist_uif=jnp.zeros((n, HIST_DAYS, 24)),
+        hist_flex_daily=jnp.zeros((n, HIST_DAYS)),
+        hist_res_daily=jnp.zeros((n, HIST_DAYS)),
+        hist_usage=jnp.zeros((n, HIST_DAYS, 24)),
+        hist_res=jnp.zeros((n, HIST_DAYS, 24)),
+        hist_tr_pred=jnp.zeros((n, HIST_DAYS)),
+        hist_uif_pred=jnp.zeros((n, HIST_DAYS, 24)),
+        carbon_hist=zone_hist,
+        queue=jnp.zeros((n,)),
+        slo_state=slo.init_state(n),
+        shaping_allowed=jnp.ones((n,), bool),
+        zones=zones,
+    )
+    # burn-in: run HIST_DAYS unshaped days to fill history
+    for d in range(HIST_DAYS):
+        state = _observe_day(state, d, shaped=False)
+    # backfill prediction history with actuals (zero-error prior); the
+    # trailing-error quantiles become honest within days of operation
+    state.hist_tr_pred = state.hist_res_daily
+    state.hist_uif_pred = state.hist_uif
+    # campus limits: 95% of observed campus peak (forces peak shaving)
+    camp_pow = np.zeros((cfg.n_campuses,))
+    power_fn, _, _ = make_power_fn(state)
+    upow = np.asarray(jax.vmap(power_fn, in_axes=1, out_axes=1)(
+        state.hist_usage[:, -7:].reshape(n, -1)))
+    peak = upow.max(axis=1)
+    for c in range(cfg.n_campuses):
+        camp_pow[c] = peak[np.asarray(campus) == c].sum() * 0.97
+    state.campus_limit = jnp.asarray(camp_pow, f32)
+    return state
+
+
+def make_power_fn(state: FleetState):
+    """Cluster power from PD piecewise models fit on recent history."""
+    n = state.cfg.n_clusters
+    npd = state.cfg.pds_per_cluster
+    # build PD-level training data from cluster usage history
+    u_cl = state.hist_usage[:, -28:].reshape(n, -1)          # (n, t)
+    u_pd = (state.lam[..., None] * u_cl[:, None, :]).reshape(n * npd, -1)
+    u_norm = u_pd / jnp.clip(
+        state.truth["capacity"][:, None, None].repeat(npd, 1).reshape(
+            n * npd, 1), 1e-6, None)
+    key = jax.random.PRNGKey(state.day)
+    p_pd = power.simulate_pd_power(key, state.pd_truth, u_norm)
+    coef, breaks = power.fit_pd_models(u_norm, p_pd)
+
+    cap_pd = state.truth["capacity"][:, None].repeat(npd, 1).reshape(-1)
+
+    def cluster_power_fn(u_cluster):                         # (n,) -> (n,)
+        u_pd_now = (state.lam * u_cluster[:, None]).reshape(-1)
+        u_n = u_pd_now / jnp.clip(cap_pd, 1e-6, None)
+        p = jax.vmap(power.pd_power)(coef, breaks, u_n[:, None])[:, 0]
+        return p.reshape(n, npd).sum(axis=1)
+
+    def cluster_slope_fn(u_cluster):
+        u_pd_now = (state.lam * u_cluster[:, None]).reshape(-1)
+        u_n = u_pd_now / jnp.clip(cap_pd, 1e-6, None)
+        s = jax.vmap(power.pd_slope)(coef, breaks, u_n[:, None])[:, 0]
+        s = s / jnp.clip(cap_pd, 1e-6, None)       # d kW / d cluster-CPU
+        return (s.reshape(n, npd) * state.lam).sum(axis=1)
+
+    return cluster_power_fn, cluster_slope_fn, (coef, breaks)
+
+
+def day_forecasts(state: FleetState):
+    """Run the forecasting pipeline for the next day (vmapped)."""
+    dow = jnp.asarray(state.day % 7)
+    uif_pred = jax.vmap(lambda h: forecast.forecast_inflexible(h, dow))(
+        state.hist_uif)
+    tuf_pred = jax.vmap(lambda d: forecast.forecast_daily_total(d, dow))(
+        state.hist_flex_daily)
+    tr_pred = jax.vmap(lambda d: forecast.forecast_daily_total(d, dow))(
+        state.hist_res_daily)
+    ra, rb = jax.vmap(forecast.fit_ratio_model)(
+        state.hist_usage[:, -28:].reshape(state.cfg.n_clusters, -1),
+        state.hist_res[:, -28:].reshape(state.cfg.n_clusters, -1))
+    eps97 = jax.vmap(lambda p, a: forecast.relative_error_quantile(
+        p[-90:], a[-90:], 0.97))(state.hist_tr_pred, state.hist_res_daily)
+    theta = forecast.theta_requirement(tr_pred, eps97)
+    alpha = jax.vmap(forecast.alpha_inflation)(theta, uif_pred, tuf_pred,
+                                               ra, rb)
+    # (1-gamma) hourly inflexible quantile from trailing prediction errors
+    epsq = jax.vmap(lambda p, a: forecast.relative_error_quantile(
+        p[-28:].reshape(-1), a[-28:].reshape(-1), 1 - state.cfg.gamma))(
+        state.hist_uif_pred, state.hist_uif)
+    uif_q = uif_pred * (1.0 + jnp.clip(epsq, 0.0, 1.0)[:, None])
+    return {"uif": uif_pred, "tuf": tuf_pred, "tr": tr_pred,
+            "ratio_a": ra, "ratio_b": rb, "theta": theta, "alpha": alpha,
+            "uif_q": uif_q}
+
+
+def carbon_forecast_next(state: FleetState, day: int):
+    """Actual + day-ahead forecast intensity per cluster for the day."""
+    key = jax.random.PRNGKey(1000 + day)
+    actuals, forecasts = [], []
+    for i, z in enumerate(state.zones):
+        act = carbon.simulate_zone(jax.random.fold_in(key, i), z, 1)[0]
+        fc = carbon.forecast_day_ahead(jax.random.fold_in(key, 100 + i),
+                                       state.carbon_hist[i], act,
+                                       z.weather_vol * 0.15)
+        actuals.append(act)
+        forecasts.append(fc)
+    actual_z = jnp.stack(actuals)         # (zones, 24)
+    fc_z = jnp.stack(forecasts)
+    zmap = jnp.asarray(state.zone_of_campus[np.asarray(state.campus)],
+                       jnp.int32)
+    return actual_z, fc_z, actual_z[zmap], fc_z[zmap]
+
+
+def build_problem(state: FleetState, fc, eta_fc, power_fn, slope_fn
+                  ) -> vcc.VCCProblem:
+    # risk-aware daily flexible budget (eq. 3) + carried-over queue
+    tau = fc["alpha"] * fc["tuf"] + state.queue
+    u_nom = fc["uif"] + tau[:, None] / 24.0
+    pow_nom = jax.vmap(power_fn, in_axes=1, out_axes=1)(u_nom)
+    pi = jax.vmap(slope_fn, in_axes=1, out_axes=1)(u_nom)
+    ratio = forecast.ratio_at(fc["ratio_a"][:, None], fc["ratio_b"][:, None],
+                              u_nom)
+    return vcc.VCCProblem(
+        eta=eta_fc, u_if=fc["uif"], u_if_q=fc["uif_q"], tau=tau,
+        pow_nom=pow_nom, pi=pi, u_pow_cap=state.u_pow_cap,
+        capacity=state.capacity, ratio=ratio, campus=state.campus,
+        campus_limit=state.campus_limit, lambda_e=state.cfg.lambda_e,
+        lambda_p=state.cfg.lambda_p)
+
+
+def _observe_day(state: FleetState, day: int, shaped: bool,
+                 vcc_curve=None, treat_mask=None, collect=False):
+    """Run one actual day (optionally VCC-shaped) and roll histories."""
+    cfg = state.cfg
+    n = cfg.n_clusters
+    key = jax.random.PRNGKey(10_000 + day)
+    k1, k2 = jax.random.split(key)
+    u_if = _sample_inflexible(k1, state.truth, day)
+    arrivals = _sample_arrivals(k2, state.truth, day)
+    usage_unshaped = u_if + arrivals            # rough for ratio sampling
+    ratio_true = _true_ratio(state.truth, usage_unshaped)
+    # burn-in uses a cheap linear power proxy (power is telemetry-only here)
+    power_fn, slope_fn, _ = make_power_fn(state) if day >= HIST_DAYS else \
+        (lambda u: 100.0 + 300.0 * u, lambda u: jnp.full_like(u, 300.0),
+         None)
+    if vcc_curve is None:
+        vcc_curve = jnp.broadcast_to(state.capacity[:, None] * 10.0,
+                                     (n, 24))
+    if treat_mask is not None:
+        vcc_curve = jnp.where(treat_mask[:, None], vcc_curve,
+                              state.capacity[:, None] * 10.0)
+    # actual carbon for the day
+    keyz = jax.random.PRNGKey(1000 + day)
+    actual_z = jnp.stack([
+        carbon.simulate_zone(jax.random.fold_in(keyz, i), z, 1)[0]
+        for i, z in enumerate(state.zones)])
+    zmap = jnp.asarray(state.zone_of_campus[np.asarray(state.campus)],
+                       jnp.int32)
+    intensity = actual_z[zmap]
+    res = admission.run_day(vcc_curve, u_if, arrivals, ratio_true,
+                            state.capacity, state.queue, power_fn,
+                            intensity)
+    # roll histories
+    def roll(hist, new):
+        return jnp.concatenate([hist[:, 1:], new[:, None]], axis=1)
+
+    state.hist_uif = jnp.concatenate(
+        [state.hist_uif[:, 1:], u_if[:, None]], axis=1)
+    state.hist_flex_daily = roll(state.hist_flex_daily, res.served)
+    state.hist_res_daily = roll(state.hist_res_daily,
+                                res.reservations.sum(axis=1))
+    state.hist_usage = jnp.concatenate(
+        [state.hist_usage[:, 1:], res.usage_total[:, None]], axis=1)
+    state.hist_res = jnp.concatenate(
+        [state.hist_res[:, 1:], res.reservations[:, None]], axis=1)
+    state.carbon_hist = jnp.concatenate(
+        [state.carbon_hist[:, 1:], actual_z[:, None]], axis=1)
+    state.queue = res.queue_end
+    state.day = day + 1
+    if collect:
+        return state, res, intensity
+    return state
+
+
+def day_cycle(state: FleetState, record: Optional[dict] = None
+              ) -> FleetState:
+    """One full CICS day: forecast -> optimize -> shape -> observe."""
+    day = state.day
+    power_fn, slope_fn, _ = make_power_fn(state)
+    fc = day_forecasts(state)
+    _, _, eta_act, eta_fc = carbon_forecast_next(state, day)
+    prob = build_problem(state, fc, eta_fc, power_fn, slope_fn)
+    sol = vcc.solve_vcc(prob)
+    vcc_curve = jnp.where((state.shaping_allowed & sol.shaped)[:, None],
+                          sol.vcc, state.capacity[:, None] * 10.0)
+    # record predictions for trailing-error quantiles
+    state.hist_tr_pred = jnp.concatenate(
+        [state.hist_tr_pred[:, 1:], fc["tr"][:, None]], axis=1)
+    state.hist_uif_pred = jnp.concatenate(
+        [state.hist_uif_pred[:, 1:], fc["uif"][:, None]], axis=1)
+    state, res, intensity = _observe_day(state, day, True, vcc_curve,
+                                         collect=True)
+    new_slo, allowed = slo.update(state.slo_state, state.cfg.slo,
+                                  res.reservations.sum(axis=1),
+                                  vcc_curve.sum(axis=1), res.unmet)
+    state.slo_state = new_slo
+    state.shaping_allowed = allowed
+    if record is not None:
+        record.update(dict(fc=fc, sol=sol, vcc=vcc_curve, result=res,
+                           intensity=intensity, problem=prob))
+    return state

@@ -1,0 +1,60 @@
+"""SLO-violation detection + feedback loop (paper §III-B2).
+
+SLO: a cluster's daily flexible compute demand may be curtailed at most ~1
+day/month (violation probability <= 0.03). Detection: if actual daily
+reservation demand crowds the VCC budget (comes within ``margin`` of
+sum_h VCC(h)) for two days in a row, shaping is disabled for that cluster
+for ``pause_days`` (paper: a week) so the forecasters re-adapt.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class SLOConfig:
+    margin: float = 1.0           # demand/VCC ratio considered "crowded"
+    pause_days: int = 7
+    target_violation_rate: float = 0.03    # ~1 day / month
+
+
+def init_state(n_clusters: int):
+    return {
+        "crowded_streak": jnp.zeros((n_clusters,), jnp.int32),
+        "pause_left": jnp.zeros((n_clusters,), jnp.int32),
+        "violation_days": jnp.zeros((n_clusters,), jnp.int32),
+        "observed_days": jnp.zeros((n_clusters,), jnp.int32),
+    }
+
+
+def update(state, cfg: SLOConfig, daily_reservations, vcc_budget,
+           flexible_unmet):
+    """One end-of-day update.
+    daily_reservations: (n,) realized total reservation demand;
+    vcc_budget: (n,) sum_h VCC(h); flexible_unmet: (n,) CPU-h of flexible
+    demand that did not run within the day (true SLO violation signal).
+    Returns (new_state, shaped_allowed (n,) bool for NEXT day)."""
+    crowded = daily_reservations >= cfg.margin * vcc_budget
+    streak = jnp.where(crowded, state["crowded_streak"] + 1, 0)
+    trigger = streak >= 2
+    pause = jnp.where(trigger, cfg.pause_days,
+                      jnp.maximum(state["pause_left"] - 1, 0))
+    violated = flexible_unmet > 1e-6
+    new = {
+        "crowded_streak": jnp.where(trigger, 0, streak),
+        "pause_left": pause,
+        "violation_days": state["violation_days"] + violated.astype(
+            jnp.int32),
+        "observed_days": state["observed_days"] + 1,
+    }
+    return new, pause == 0
+
+
+def violation_rate(state):
+    return state["violation_days"] / jnp.clip(state["observed_days"], 1,
+                                              None)

@@ -1,0 +1,51 @@
+"""Beyond-paper extension: spatial shifting of flexible compute (paper §V
+names this as the planned next step; we implement the day-ahead layer).
+
+Given per-cluster risk-aware daily flexible budgets tau_c, redistribute
+daily totals across clusters (subject to per-cluster headroom) to minimize
+expected carbon, THEN run the paper's temporal VCC optimization with the
+shifted budgets. Conservation: sum_c tau'_c = sum_c tau_c; movement is
+limited to ``mobility`` (fraction of a cluster's flexible work that is
+location-flexible) and to clusters with spare daily headroom.
+
+This is the same projected-gradient machinery as vcc.py, applied across the
+cluster axis with carbon price = daily usage-weighted intensity.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vcc import VCCProblem, project_conservation
+
+f32 = jnp.float32
+
+
+def spatial_shift(p: VCCProblem, *, mobility: float = 0.3,
+                  iters: int = 200, lr: float = 0.1
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (tau_shifted (n,), carbon_price (n,)).
+
+    carbon_price_c = mean_h eta(c,h) * pi(c,h): the marginal kgCO2e of
+    placing one CPU-day at cluster c (before temporal shaping).
+    """
+    price = (p.eta * p.pi).mean(axis=1)                      # (n,)
+    tau = p.tau
+    # headroom: how much extra daily flexible CPU the cluster could run
+    room_h = jnp.clip(p.capacity[:, None] / p.ratio - p.u_if, 0.0, None)
+    headroom = jnp.clip(room_h.sum(axis=1) - tau, 0.0, None)
+    lo = -mobility * tau                                     # can export
+    ub = jnp.minimum(mobility * tau.sum() / jnp.maximum(tau.shape[0], 1),
+                     headroom)                               # can import
+
+    def body(i, d):
+        g = price
+        d = d - lr * (g / jnp.clip(jnp.abs(price).max(), 1e-9, None)) \
+            * tau.mean()
+        return project_conservation(d[None, :], lo[None, :],
+                                    ub[None, :])[0]
+
+    shift = jax.lax.fori_loop(0, iters, body, jnp.zeros_like(tau))
+    return jnp.clip(tau + shift, 0.0, None), price

@@ -1,0 +1,213 @@
+"""Risk-aware day-ahead VCC optimization (paper §III-C, eq. 4).
+
+Per cluster c and hour h, choose flexible-usage deviations delta(c,h) from
+the hourly average tau/24, minimizing
+
+    lambda_e * sum_{c,h} eta(c,h) * [Pow(U_nom) + pi(U_nom) * delta * tau/24]
+  + lambda_p * sum_c  y_c ,                    y_c >= Pow_c(h)  for all h
+
+subject to
+  * daily conservation        sum_h delta(c,h) = 0
+  * power-capping (chance)    (1+delta) tau/24 <= U_pow - (U_IF)_{1-gamma}(h)
+  * machine capacity          VCC(c,h) = (U_IF + (1+delta) tau/24) R(h) <= C
+  * campus contracts          sum_{c in dc} y_c <= L_cont(dc)
+  * delta >= -1               (flexible usage cannot go negative)
+
+Solver: projected gradient on delta (the objective is linear + a smooth-max
+peak term), with an EXACT O(iter x n x 24) bisection projection onto
+{sum_h delta = 0} ∩ [lo, ub], and dual ascent on the campus coupling. The
+fused PGD step is the CICS fleet-scale hotspot and has a Pallas kernel
+(repro.kernels.vcc_pgd); this module is the jnp reference path.
+
+Clusters whose bounds make shaping infeasible (too full / tau ~ 0) are
+excluded and get VCC = machine capacity (paper: ~10% of clusters per day).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class VCCProblem:
+    """Stacked fleetwide problem. n = clusters, H = 24."""
+    eta: jnp.ndarray          # (n, H) carbon intensity forecast kg/kWh
+    u_if: jnp.ndarray         # (n, H) predicted inflexible CPU
+    u_if_q: jnp.ndarray       # (n, H) (1-gamma) quantile of inflexible CPU
+    tau: jnp.ndarray          # (n,)  risk-aware daily flexible CPU (alpha*T)
+    pow_nom: jnp.ndarray      # (n, H) power at nominal usage (kW)
+    pi: jnp.ndarray           # (n, H) power slope at nominal usage (kW/CPU)
+    u_pow_cap: jnp.ndarray    # (n,)  power-capping CPU threshold
+    capacity: jnp.ndarray     # (n,)  machine capacity (CPU)
+    ratio: jnp.ndarray        # (n, H) reservations-to-usage ratio R(h)
+    campus: jnp.ndarray       # (n,) int campus id
+    campus_limit: jnp.ndarray  # (n_dc,) power limits (kW)
+    lambda_e: float = 0.05    # $ / kg CO2e
+    lambda_p: float = 0.1     # $ / kW / day
+    # paper §III-C "other constraints": bound the allowed intraday drop in
+    # flexible usage (1.0 = flexible may drop to zero)
+    drop_limit: float = 0.8
+
+
+@dataclass
+class VCCSolution:
+    delta: jnp.ndarray        # (n, H)
+    y: jnp.ndarray            # (n,) peak power bound
+    vcc: jnp.ndarray          # (n, H) hourly reservation capacity
+    shaped: jnp.ndarray       # (n,) bool: cluster actively shaped
+    mu: jnp.ndarray           # (n_dc,) campus duals
+    objective: jnp.ndarray    # scalar
+
+
+def delta_bounds(p: VCCProblem):
+    """Per (c,h) bounds on delta + feasibility mask."""
+    tau24 = jnp.clip(p.tau[:, None] / 24.0, 1e-9, None)
+    ub_pow = (p.u_pow_cap[:, None] - p.u_if_q) / tau24 - 1.0
+    ub_cap = (p.capacity[:, None] / p.ratio - p.u_if) / tau24 - 1.0
+    ub = jnp.minimum(ub_pow, ub_cap)
+    lo = jnp.full_like(ub, -p.drop_limit)
+    ub = jnp.clip(ub, -p.drop_limit, 24.0)
+    # feasible to conserve the day iff sum_h ub >= 0 and tau > 0
+    feasible = (ub.sum(axis=1) >= 0.0) & (p.tau > 1e-6) \
+        & jnp.all(ub > -p.drop_limit + 1e-9, axis=1)
+    return lo, ub, feasible
+
+
+def project_conservation(z, lo, ub, iters: int = 50):
+    """Euclidean projection of each row onto {sum=0} ∩ [lo, ub] via
+    bisection on the shift nu: sum(clip(z - nu, lo, ub)) = 0."""
+    nu_min = jnp.min(z, 1) - jnp.max(ub, 1)          # f(nu_min) = sum ub >= 0
+    nu_max = jnp.max(z, 1) - jnp.min(lo, 1)          # f(nu_max) = sum lo <= 0
+
+    def body(i, carry):
+        a, b = carry
+        m = 0.5 * (a + b)
+        f = jnp.sum(jnp.clip(z - m[:, None], lo, ub), axis=1)
+        a = jnp.where(f > 0, m, a)
+        b = jnp.where(f > 0, b, m)
+        return a, b
+
+    a, b = jax.lax.fori_loop(0, iters, body, (nu_min, nu_max))
+    nu = 0.5 * (a + b)
+    return jnp.clip(z - nu[:, None], lo, ub)
+
+
+def cluster_power(p: VCCProblem, delta):
+    """Hourly power under delta (local linearization around nominal)."""
+    return p.pow_nom + p.pi * delta * p.tau[:, None] / 24.0
+
+
+def smooth_peak(pow_h, temp):
+    """Differentiable softmax-peak and its weights. pow_h: (n, H)."""
+    w = jax.nn.softmax(pow_h / temp, axis=1)
+    return jnp.sum(w * pow_h, axis=1), w
+
+
+def objective(p: VCCProblem, delta, mu):
+    pow_h = cluster_power(p, delta)
+    y = pow_h.max(axis=1)
+    carbon = p.lambda_e * jnp.sum(p.eta * pow_h)
+    peak_price = p.lambda_p + mu[p.campus]
+    return carbon + jnp.sum(peak_price * y)
+
+
+def pgd_step(p: VCCProblem, delta, mu, lo, ub, lr, temp):
+    """One projected-gradient step (the Pallas-kernelized hotspot)."""
+    tau24 = p.tau[:, None] / 24.0
+    pow_h = cluster_power(p, delta)
+    _, w = smooth_peak(pow_h, temp)
+    peak_price = (p.lambda_p + mu[p.campus])[:, None]
+    grad = (p.lambda_e * p.eta + peak_price * w) * p.pi * tau24
+    return project_conservation(delta - lr * grad, lo, ub)
+
+
+def solve_vcc(p: VCCProblem, *, inner_iters: int = 80, outer_iters: int = 20,
+              lr: float = 0.5, temp_frac: float = 0.02, rho: float = 0.2,
+              use_pallas: Optional[bool] = None) -> VCCSolution:
+    n, H = p.eta.shape
+    lo, ub, feasible = delta_bounds(p)
+    # neutralize infeasible clusters: bounds collapse to {0}
+    lo = jnp.where(feasible[:, None], lo, 0.0)
+    ub = jnp.where(feasible[:, None], ub, 0.0)
+    temp = temp_frac * jnp.clip(p.pow_nom.mean(), 1e-6, None)
+    n_dc = p.campus_limit.shape[0]
+    # gradient scale varies per cluster: normalize lr by pi*tau/24
+    g_scale = jnp.clip((p.pi * p.tau[:, None] / 24.0).max(axis=1,
+                                                          keepdims=True),
+                       1e-9, None)
+    lr_eff = lr / (g_scale * jnp.clip(
+        p.lambda_e * p.eta.max(axis=1, keepdims=True) + p.lambda_p, 1e-9,
+        None))
+
+    if use_pallas is None:
+        use_pallas = False
+    if use_pallas:
+        from repro.kernels.vcc_pgd import ops as _k
+
+        def inner(delta, mu):
+            return _k.pgd_epoch(p, delta, mu, lo, ub, lr_eff, temp,
+                                inner_iters)
+    else:
+        def inner(delta, mu):
+            def body(i, d):
+                tau24 = p.tau[:, None] / 24.0
+                pow_h = cluster_power(p, d)
+                _, w = smooth_peak(pow_h, temp)
+                peak_price = (p.lambda_p + mu[p.campus])[:, None]
+                grad = (p.lambda_e * p.eta + peak_price * w) * p.pi * tau24
+                return project_conservation(d - lr_eff * grad, lo, ub)
+            return jax.lax.fori_loop(0, inner_iters, body, delta)
+
+    def outer(carry, _):
+        delta, mu = carry
+        delta = inner(delta, mu)
+        pow_h = cluster_power(p, delta)
+        y = pow_h.max(axis=1)
+        campus_pow = jax.ops.segment_sum(y, p.campus, num_segments=n_dc)
+        mu = jnp.clip(mu + rho * (campus_pow - p.campus_limit)
+                      / jnp.clip(p.campus_limit, 1e-9, None), 0.0, None)
+        return (delta, mu), None
+
+    delta0 = jnp.zeros((n, H), f32)
+    mu0 = jnp.zeros((n_dc,), f32)
+    (delta, mu), _ = jax.lax.scan(outer, (delta0, mu0), None,
+                                  length=outer_iters)
+    pow_h = cluster_power(p, delta)
+    y = pow_h.max(axis=1)
+    vcc_shaped = (p.u_if + (1.0 + delta) * p.tau[:, None] / 24.0) * p.ratio
+    vcc = jnp.where(feasible[:, None],
+                    jnp.minimum(vcc_shaped, p.capacity[:, None]),
+                    p.capacity[:, None])
+    return VCCSolution(delta=delta, y=y, vcc=vcc, shaped=feasible, mu=mu,
+                       objective=objective(p, delta, mu))
+
+
+# ------------------------------------------------- exact greedy reference
+
+def greedy_linear_reference(eta_pi, lo, ub, iters_unused=None):
+    """Exact minimizer of sum_h c_h * delta_h with sum delta = 0, box
+    bounds, for ONE cluster (numpy-style; used to validate PGD in tests).
+
+    Classic exchange argument: push delta to ub at the cheapest hours and lo
+    at the most expensive, with one marginal hour balancing the budget.
+    """
+    import numpy as np
+    c = np.asarray(eta_pi, dtype=np.float64)
+    lo = np.asarray(lo, np.float64).copy()
+    ub = np.asarray(ub, np.float64).copy()
+    order = np.argsort(c)
+    delta = lo.copy()                 # start everything at lower bound
+    budget = -delta.sum()             # must add this much
+    for h in order:                   # fill cheapest hours first
+        room = ub[h] - delta[h]
+        add = min(room, budget)
+        delta[h] += add
+        budget -= add
+        if budget <= 1e-12:
+            break
+    return delta

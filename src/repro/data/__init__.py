@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, DataLoader, batch_at
+
+__all__ = ["DataConfig", "DataLoader", "batch_at"]

@@ -1,0 +1,140 @@
+"""Pallas TPU flash attention: block-tiled online softmax.
+
+Tiling: grid = (B*N, nq, nk); q blocks (qb, H) and k/v blocks (kb, H) live in
+VMEM; the (m, l, acc) online-softmax state lives in f32 VMEM scratch carried
+across the sequential nk grid dimension. GQA is native: the kv index map
+folds the query head onto its kv head (no repeat_kv materialization).
+Causal/window masking skips fully-masked kv blocks via pl.when (predicated
+on TPU, so skipped blocks cost no MXU work).
+
+Static restrictions (the XLA path in ref.py covers the rest): q_offset must
+be a static int, length None, Sq == Sk or q_offset-aligned decode prefixes.
+Validated on CPU with interpret=True against ref.attention_reference.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_QB = 128
+DEFAULT_KB = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale, causal, window, softcap, q_offset, qb, kb, nk,
+                  kv_len):
+    i = pl.program_id(1)          # q block
+    j = pl.program_id(2)          # kv block
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_first = q_offset + i * qb            # absolute pos of first q row
+    q_last = q_first + qb - 1
+    k_first = j * kb
+    relevant = True
+    if causal:
+        relevant = k_first <= q_last
+    if window is not None:
+        # any (qpos, kpos) pair in the block can satisfy qpos - kpos < window
+        relevant = jnp.logical_and(relevant,
+                                   (k_first + kb - 1) > q_first - window)
+
+    @pl.when(relevant)
+    def _block():
+        q = q_ref[0].astype(jnp.float32)               # (qb, H)
+        k = k_ref[0].astype(jnp.float32)               # (kb, H)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_first + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 0)
+        kpos = k_first + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 1)
+        mask = kpos < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, qpos - kpos < window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    q_offset: int = 0, length=None,
+                    scale: Optional[float] = None,
+                    qb: int = DEFAULT_QB, kb: int = DEFAULT_KB,
+                    interpret: bool = False):
+    """q: (B, Sq, N, H); k, v: (B, Sk, K, H); N % K == 0. Returns like q."""
+    assert length is None, "length masking: use the XLA path"
+    assert isinstance(q_offset, int), "traced q_offset: use the XLA path"
+    B, Sq, N, H = q.shape
+    _, Sk, K, _ = k.shape
+    G = N // K
+    scale = (H ** -0.5) if scale is None else scale
+    qb = min(qb, Sq)
+    kb = min(kb, Sk)
+    pad_q = (-Sq) % qb
+    pad_k = (-Sk) % kb
+    qt = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) \
+        .transpose(0, 2, 1, 3).reshape(B * N, Sq + pad_q, H)
+    kt = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) \
+        .transpose(0, 2, 1, 3).reshape(B * K, Sk + pad_k, H)
+    vt = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) \
+        .transpose(0, 2, 1, 3).reshape(B * K, Sk + pad_k, H)
+    nq = (Sq + pad_q) // qb
+    nk = (Sk + pad_k) // kb
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, q_offset=q_offset, qb=qb, kb=kb, nk=nk, kv_len=Sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * N, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, qb, H), lambda b, i, j: (b, i, 0)),
+            # GQA fold: query row b = batch * N + n attends kv row
+            # batch * K + n // G
+            pl.BlockSpec((1, kb, H),
+                         lambda b, i, j, N=N, K=K, G=G:
+                         ((b // N) * K + (b % N) // G, j, 0)),
+            pl.BlockSpec((1, kb, H),
+                         lambda b, i, j, N=N, K=K, G=G:
+                         ((b // N) * K + (b % N) // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qb, H), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * N, Sq + pad_q, H), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb,), jnp.float32),        # m
+            pltpu.VMEM((qb,), jnp.float32),        # l
+            pltpu.VMEM((qb, H), jnp.float32),      # acc
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out.reshape(B, N, Sq + pad_q, H).transpose(0, 2, 1, 3)
+    return out[:, :Sq]

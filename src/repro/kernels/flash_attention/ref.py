@@ -1,0 +1,133 @@
+"""Pure-jnp attention oracles.
+
+``attention_reference`` is the exact O(S^2)-memory oracle used by kernel
+tests. ``attention_chunked`` is the production XLA path: query-chunked,
+bounded-memory, numerically identical rows (full-K softmax per query chunk).
+Both support GQA, causal/local masking, logit soft-capping, cache-length
+masking for decode, and a query position offset.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.act import constrain
+
+NEG_INF = -1e30
+
+
+def _mask(qpos, kpos, *, causal, window, length):
+    """(Sq, Sk) boolean mask (True = attend). Positions are absolute."""
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), dtype=bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        m &= (qpos[:, None] - kpos[None, :]) < window
+    if length is not None:
+        # length: scalar or (B,) handled by caller broadcasting; here scalar
+        m &= kpos[None, :] < length
+    return m
+
+
+def _attend(q, k, v, scale, softcap, mask):
+    """One exact attention block (native-dtype matmuls, f32 softmax).
+    q: (B,Sq,N,H); k,v: (B,Sk,K,H); mask: (Sq,Sk).
+
+    KV heads are expanded to the N query heads (repeat_kv) so the head axis
+    shards cleanly on the `model` mesh axis even when K < TP (GQA). The
+    Pallas TPU kernel keeps native GQA; this is the XLA path.
+    """
+    B, Sq, N, H = q.shape
+    _, Sk, K, _ = k.shape
+    G = N // K
+    if Sq > 16:
+        # Full-seq path: expand KV heads to N (repeat_kv) so the head axis
+        # shards cleanly on `model` even when K < TP, and anchor shardings
+        # (scan bodies lose them). The Pallas kernel keeps native GQA.
+        if G > 1:
+            k = jnp.repeat(k, G, axis=2)
+            v = jnp.repeat(v, G, axis=2)
+        q = constrain(q, "batch", None, "model", None)
+        k = constrain(k, "batch", None, "model", None)
+        v = constrain(v, "batch", None, "model", None)
+        s = jnp.einsum("bqnh,bsnh->bnqs", q, k,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        p = constrain(p, "batch", "model", None, None)
+        o = jnp.einsum("bnqs,bsnh->bqnh", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        return constrain(o.astype(q.dtype), "batch", None, "model", None)
+    # Decode path: grouped GQA einsum, no repeats, no anchors — propagation
+    # follows the cache layout (heads- or head_dim-sharded); a head_dim-
+    # sharded cache yields flash-decode style partial scores + psum.
+    qg = q.reshape(B, Sq, K, G, H)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, N, H).astype(q.dtype)
+
+
+def attention_reference(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        q_offset=0, length=None,
+                        scale: Optional[float] = None):
+    """Exact attention. q: (B,Sq,N,H); k,v: (B,Sk,K,H); N % K == 0.
+
+    q_offset: absolute position of q[0] (decode: current pos). May be traced.
+    length: mask out k positions >= length (valid cache length). Scalar/traced.
+    Returns (B, Sq, N, H) in q.dtype.
+    """
+    B, Sq, N, H = q.shape
+    _, Sk, K, _ = k.shape
+    scale = (H ** -0.5) if scale is None else scale
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    m = _mask(qpos, kpos, causal=causal, window=window, length=length)
+    return _attend(q, k, v, scale, softcap, m)
+
+
+def attention_chunked(q, k, v, *, causal: bool = True,
+                      window: Optional[int] = None,
+                      softcap: Optional[float] = None,
+                      q_offset=0, length=None,
+                      scale: Optional[float] = None,
+                      q_chunk: int = 512):
+    """Query-chunked attention with bounded memory (full-K rows per chunk).
+
+    Numerically identical to ``attention_reference`` (same row softmax).
+    Memory per step: O(q_chunk * Sk) scores instead of O(Sq * Sk).
+    """
+    B, Sq, N, H = q.shape
+    _, Sk, K, _ = k.shape
+    if Sq <= q_chunk:
+        return attention_reference(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, q_offset=q_offset,
+                                   length=length, scale=scale)
+    scale = (H ** -0.5) if scale is None else scale
+    pad = (-Sq) % q_chunk
+    nq = (Sq + pad) // q_chunk
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qp = qp.reshape(B, nq, q_chunk, N, H).transpose(1, 0, 2, 3, 4)
+    kpos = jnp.arange(Sk)
+
+    def body(_, inp):
+        qc, i = inp
+        qpos = q_offset + i * q_chunk + jnp.arange(q_chunk)
+        m = _mask(qpos, kpos, causal=causal, window=window, length=length)
+        o = _attend(qc, k, v, scale, softcap, m)
+        return None, o
+
+    _, out = jax.lax.scan(body, None, (qp, jnp.arange(nq)))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, nq * q_chunk, N, H)
+    return out[:, :Sq]

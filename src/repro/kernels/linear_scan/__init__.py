@@ -1,0 +1,1 @@
+from repro.kernels.linear_scan.ops import gla, gla_step  # noqa: F401

@@ -1,0 +1,167 @@
+"""Pure-jnp chunked gated-linear-attention (GLA) oracle.
+
+One primitive covers both assigned recurrent families:
+
+* **Mamba2 / SSD** (scalar per-head decay):  ``h_t = d_t * h_{t-1} + k_t v_t^T``,
+  ``o_t = q_t @ h_t``  (inclusive, ``strict=False``).
+* **RWKV6 "Finch"** (per-key-dim decay vector + bonus):
+  ``h_t = diag(w_t) h_{t-1} + k_t v_t^T``,
+  ``o_t = q_t @ (h_{t-1} + diag(u) k_t v_t^T)``  (``strict=True``, ``bonus=u``).
+
+The chunked algorithm materializes intra-chunk decay products pairwise, which
+is numerically exact for arbitrarily strong decays (no ``exp(-cum)`` overflow
+— all pairwise exponents are ≤ 0 because decays are ≤ 1). Scalar mode uses a
+(c, c) segsum per head; vector mode a (c, c, K) tensor, so callers pass a
+smaller chunk (default 64 / 32).
+
+``gla_naive`` is the O(S) sequential oracle used to validate the chunked
+algorithm itself.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.act import constrain
+
+NEG_INF = -1e30
+
+
+def _effective_cum(cum, strict):
+    """Query-side cumulative log decay: cum[t] (inclusive) or cum[t-1] (strict)."""
+    if not strict:
+        return cum
+    pad = [(0, 0)] * cum.ndim
+    pad[1] = (1, 0)
+    return jnp.pad(cum, pad)[:, :-1]
+
+
+def gla_naive(q, k, v, log_decay, *, bonus=None, strict: bool = False,
+              initial_state=None) -> Tuple[jax.Array, jax.Array]:
+    """Sequential recurrence oracle. Shapes:
+    q, k: (B, S, H, K); v: (B, S, H, V); log_decay: (B, S, H) or (B, S, H, K);
+    bonus: (H, K) or None; initial_state: (B, H, K, V) or None.
+    Returns (o: (B, S, H, V), final_state: (B, H, K, V)).
+    """
+    B, S, H, K = q.shape
+    V = v.shape[-1]
+    f32 = jnp.float32
+    scalar = log_decay.ndim == 3
+    h0 = (jnp.zeros((B, H, K, V), f32) if initial_state is None
+          else initial_state.astype(f32))
+
+    def step(h, inp):
+        qt, kt, vt, ldt = inp              # (B,H,K),(B,H,K),(B,H,V),(B,H[,K])
+        d = jnp.exp(ldt.astype(f32))
+        d = d[..., None, None] if scalar else d[..., :, None]
+        kv = kt.astype(f32)[..., :, None] * vt.astype(f32)[..., None, :]
+        if strict:
+            ho = h
+            if bonus is not None:
+                ho = ho + bonus.astype(f32)[None, :, :, None] * kv
+            o = jnp.einsum("bhk,bhkv->bhv", qt.astype(f32), ho)
+            h = d * h + kv
+        else:
+            h = d * h + kv
+            o = jnp.einsum("bhk,bhkv->bhv", qt.astype(f32), h)
+        return h, o
+
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          log_decay.swapaxes(0, 1))
+    hT, o = jax.lax.scan(step, h0, xs)
+    return o.swapaxes(0, 1).astype(q.dtype), hT
+
+
+def gla_chunked(q, k, v, log_decay, *, bonus=None, strict: bool = False,
+                chunk: int = 64, initial_state=None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked (parallel-within-chunk) GLA. Same contract as ``gla_naive``."""
+    B, S, H, K = q.shape
+    V = v.shape[-1]
+    f32 = jnp.float32
+    scalar = log_decay.ndim == 3
+    c = min(chunk, S)
+    pad = (-S) % c
+    nc = (S + pad) // c
+
+    def padseq(x, value=0.0):
+        cfg = [(0, 0)] * x.ndim
+        cfg[1] = (0, pad)
+        return jnp.pad(x, cfg, constant_values=value)
+
+    # pad: decay 0 (=> factor 1), k 0 (=> no state contribution)
+    qp, kp, vp = padseq(q), padseq(k), padseq(v)
+    ldp = padseq(log_decay)
+
+    def chunks(x):  # (B, S', ...) -> (nc, B, c, ...)
+        return x.reshape((B, nc, c) + x.shape[2:]).swapaxes(0, 1)
+
+    h0 = (jnp.zeros((B, H, K, V), f32) if initial_state is None
+          else initial_state.astype(f32))
+    t_idx = jnp.arange(c)
+    valid = (t_idx[:, None] > t_idx[None, :]) if strict else \
+            (t_idx[:, None] >= t_idx[None, :])
+
+    def body(h, inp):
+        qc, kc, vc, ldc = inp
+        qc = constrain(qc, "batch", None, "model", None).astype(f32)
+        kc = constrain(kc, "batch", None, "model", None).astype(f32)
+        vc = constrain(vc, "batch", None, "model", None).astype(f32)
+        h = constrain(h, "batch", "model", None, None)
+        cum = jnp.cumsum(ldc.astype(f32), axis=1)       # (B,c,H[,K])
+        cum_q = _effective_cum(cum, strict)
+        cum_last = cum[:, -1]                            # (B,H[,K])
+        # --- inter-chunk: query against chunk-start state
+        qs = qc * jnp.exp(cum_q if not scalar else cum_q[..., None])
+        o = jnp.einsum("bthk,bhkv->bthv", qs, h)
+        # --- intra-chunk
+        if scalar:
+            dmat = cum_q[:, :, None] - cum[:, None, :]   # (B,t,s,H)
+            dmat = jnp.where(valid[None, :, :, None], dmat, NEG_INF)
+            A = jnp.einsum("bthk,bshk->btsh", qc, kc) * jnp.exp(dmat)
+        else:
+            dmat = cum_q[:, :, None] - cum[:, None, :]   # (B,t,s,H,K)
+            dmat = jnp.where(valid[None, :, :, None, None], dmat, NEG_INF)
+            A = jnp.einsum("bthk,bshk,btshk->btsh", qc, kc, jnp.exp(dmat))
+        o = o + jnp.einsum("btsh,bshv->bthv", A, vc)
+        if bonus is not None:
+            coef = jnp.einsum("bthk,hk,bthk->bth", qc, bonus.astype(f32), kc)
+            o = o + coef[..., None] * vc
+        # --- state update
+        decay_out = jnp.exp(cum_last)                    # (B,H[,K])
+        rem = cum_last[:, None] - cum                    # (B,c,H[,K])
+        ks = kc * (jnp.exp(rem)[..., None] if scalar else jnp.exp(rem))
+        h_new = (decay_out[..., None, None] if scalar
+                 else decay_out[..., :, None]) * h
+        h_new = h_new + jnp.einsum("bthk,bthv->bhkv", ks, vc)
+        o = constrain(o, "batch", None, "model", None)
+        return h_new, o
+
+    hT, o = jax.lax.scan(body, h0, (chunks(qp), chunks(kp), chunks(vp),
+                                    chunks(ldp)))
+    o = o.swapaxes(0, 1).reshape(B, nc * c, H, V)[:, :S]
+    return o.astype(q.dtype), hT
+
+
+def gla_step(q, k, v, log_decay, state, *, bonus=None, strict: bool = False
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step. q,k: (B,H,K); v: (B,H,V); log_decay: (B,H[,K]);
+    state: (B,H,K,V). Returns (o: (B,H,V), new_state)."""
+    f32 = jnp.float32
+    scalar = log_decay.ndim == 2
+    d = jnp.exp(log_decay.astype(f32))
+    d = d[..., None, None] if scalar else d[..., :, None]
+    kv = k.astype(f32)[..., :, None] * v.astype(f32)[..., None, :]
+    st = state.astype(f32)
+    if strict:
+        ho = st
+        if bonus is not None:
+            ho = ho + bonus.astype(f32)[None, :, :, None] * kv
+        o = jnp.einsum("bhk,bhkv->bhv", q.astype(f32), ho)
+        new = d * st + kv
+    else:
+        new = d * st + kv
+        o = jnp.einsum("bhk,bhkv->bhv", q.astype(f32), new)
+    return o.astype(q.dtype), new

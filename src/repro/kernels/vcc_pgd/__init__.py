@@ -1,0 +1,1 @@
+from repro.kernels.vcc_pgd.ops import pgd_epoch  # noqa: F401

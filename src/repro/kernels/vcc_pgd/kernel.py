@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: fused VCC projected-gradient epoch.
+
+Tiling: grid = (n_clusters / TC,); each step loads a (TC, 24) cluster tile
+(delta, eta, pi, pow_nom, lo, ub + per-cluster scalars) into VMEM and runs
+the FULL inner optimization epoch — ``iters`` x [gradient of the linearized
+carbon+peak objective → 50-step bisection projection onto the conservation
+simplex slab] — without touching HBM between iterations. The day-ahead
+optimizer calls this once per dual-ascent round for the whole fleet
+(~O(100k) clusters x 24 h), so HBM round-trips per PGD iteration are the
+hotspot being removed.
+
+Validated with interpret=True against ref.pgd_epoch_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 256
+
+
+def _pgd_kernel(delta_ref, eta_ref, pi_ref, pow_ref, tau_ref, price_ref,
+                lo_ref, ub_ref, lr_ref, out_ref, *, temp, lambda_e, iters,
+                proj_iters):
+    delta = delta_ref[...].astype(jnp.float32)
+    eta = eta_ref[...].astype(jnp.float32)
+    pi = pi_ref[...].astype(jnp.float32)
+    pow_nom = pow_ref[...].astype(jnp.float32)
+    tau24 = tau_ref[...].astype(jnp.float32)
+    price = price_ref[...].astype(jnp.float32)
+    lo = lo_ref[...].astype(jnp.float32)
+    ub = ub_ref[...].astype(jnp.float32)
+    lr = lr_ref[...].astype(jnp.float32)
+
+    def project(z):
+        a = jnp.min(z, 1) - jnp.max(ub, 1)
+        b = jnp.max(z, 1) - jnp.min(lo, 1)
+
+        def pbody(i, ab):
+            a, b = ab
+            m = 0.5 * (a + b)
+            f = jnp.sum(jnp.clip(z - m[:, None], lo, ub), axis=1)
+            a = jnp.where(f > 0, m, a)
+            b = jnp.where(f > 0, b, m)
+            return a, b
+
+        a, b = jax.lax.fori_loop(0, proj_iters, pbody, (a, b))
+        nu = 0.5 * (a + b)
+        return jnp.clip(z - nu[:, None], lo, ub)
+
+    def body(i, d):
+        pow_h = pow_nom + pi * d * tau24
+        s = pow_h / temp
+        s = s - jnp.max(s, axis=1, keepdims=True)
+        e = jnp.exp(s)
+        w = e / jnp.sum(e, axis=1, keepdims=True)
+        grad = (lambda_e * eta + price * w) * pi * tau24
+        return project(d - lr * grad)
+
+    out_ref[...] = jax.lax.fori_loop(0, iters, body, delta).astype(
+        out_ref.dtype)
+
+
+def pgd_epoch_pallas(delta, eta, pi, pow_nom, tau24, price, lo, ub, lr, *,
+                     temp: float, lambda_e: float, iters: int,
+                     proj_iters: int = 50, tile: int = DEFAULT_TILE,
+                     interpret: bool = False):
+    """All matrices (n, H); tau24/price/lr (n, 1). Returns new delta."""
+    n, H = delta.shape
+    tile = min(tile, n)
+    pad = (-n) % tile
+
+    def p2(x):
+        return jnp.pad(x, ((0, pad), (0, 0)))
+
+    args = [p2(x) for x in (delta, eta, pi, pow_nom, tau24, price, lo, ub,
+                            lr)]
+    nt = (n + pad) // tile
+    kernel = functools.partial(_pgd_kernel, temp=temp, lambda_e=lambda_e,
+                               iters=iters, proj_iters=proj_iters)
+    wide = pl.BlockSpec((tile, H), lambda i: (i, 0))
+    slim = pl.BlockSpec((tile, 1), lambda i: (i, 0))
+    out = pl.pallas_call(
+        kernel,
+        grid=(nt,),
+        in_specs=[wide, wide, wide, wide, slim, slim, wide, wide, slim],
+        out_specs=wide,
+        out_shape=jax.ShapeDtypeStruct((n + pad, H), delta.dtype),
+        interpret=interpret,
+    )(*args)
+    return out[:n]

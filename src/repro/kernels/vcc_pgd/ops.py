@@ -1,0 +1,37 @@
+"""Dispatching wrapper for the fused VCC PGD epoch."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.vcc_pgd import ref as _ref
+
+
+def _tpu_available() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def pgd_epoch(prob, delta, mu, lo, ub, lr_eff, temp, iters,
+              use_pallas: Optional[bool] = None, interpret: bool = False):
+    """Adapter from a repro.core.vcc.VCCProblem to the kernel layout."""
+    tau24 = (prob.tau[:, None] / 24.0).astype(jnp.float32)
+    price = (prob.lambda_p + mu[prob.campus])[:, None].astype(jnp.float32)
+    lr = jnp.broadcast_to(jnp.asarray(lr_eff, jnp.float32),
+                          (delta.shape[0], 1)) \
+        if jnp.ndim(lr_eff) < 2 else lr_eff.astype(jnp.float32)
+    kw = dict(temp=float(temp), lambda_e=float(prob.lambda_e),
+              iters=int(iters))
+    if use_pallas is None:
+        use_pallas = _tpu_available()
+    if use_pallas or interpret:
+        from repro.kernels.vcc_pgd import kernel as _kernel
+        return _kernel.pgd_epoch_pallas(
+            delta, prob.eta, prob.pi, prob.pow_nom, tau24, price, lo, ub,
+            lr, interpret=interpret, **kw)
+    return _ref.pgd_epoch_ref(delta, prob.eta, prob.pi, prob.pow_nom, tau24,
+                              price, lo, ub, lr, **kw)

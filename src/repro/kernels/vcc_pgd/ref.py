@@ -1,0 +1,45 @@
+"""jnp oracle for the fused VCC projected-gradient epoch (paper §III-C).
+
+One epoch = ``iters`` iterations of [linearized-objective gradient →
+exact bisection projection onto {sum_h delta = 0} ∩ [lo, ub]] for a tile of
+clusters. This is the math executed per day for every cluster fleetwide;
+the Pallas kernel keeps the whole epoch in VMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+def project_row(z, lo, ub, iters: int = 50):
+    """Bisection projection, rows independent. z/lo/ub: (n, H)."""
+    a = jnp.min(z, 1) - jnp.max(ub, 1)
+    b = jnp.max(z, 1) - jnp.min(lo, 1)
+
+    def body(i, ab):
+        a, b = ab
+        m = 0.5 * (a + b)
+        f = jnp.sum(jnp.clip(z - m[:, None], lo, ub), axis=1)
+        a = jnp.where(f > 0, m, a)
+        b = jnp.where(f > 0, b, m)
+        return a, b
+
+    a, b = jax.lax.fori_loop(0, iters, body, (a, b))
+    nu = 0.5 * (a + b)
+    return jnp.clip(z - nu[:, None], lo, ub)
+
+
+def pgd_epoch_ref(delta, eta, pi, pow_nom, tau24, price, lo, ub, lr,
+                  *, temp: float, lambda_e: float, iters: int,
+                  proj_iters: int = 50):
+    """delta/eta/pi/pow_nom/lo/ub: (n, H); tau24/price/lr: (n, 1)."""
+
+    def body(i, d):
+        pow_h = pow_nom + pi * d * tau24
+        w = jax.nn.softmax(pow_h / temp, axis=1)
+        grad = (lambda_e * eta + price * w) * pi * tau24
+        return project_row(d - lr * grad, lo, ub, proj_iters)
+
+    return jax.lax.fori_loop(0, iters, body, delta)

@@ -1,0 +1,322 @@
+"""Static cost analysis of compiled (post-SPMD, per-device) HLO text.
+
+Why: XLA:CPU's ``compiled.cost_analysis()`` counts ``while`` bodies ONCE and
+reports unfused byte traffic, so neither FLOPs nor bytes are usable for a
+TPU roofline when models scan over layers. This module walks the HLO call
+graph from ENTRY, multiplying costs through ``while`` trip counts (extracted
+from loop-condition constants), ``fusion``/``call`` bodies, and accumulating:
+
+* ``dot_flops``   — 2 * prod(output dims) * prod(contracting dims) per dot
+* ``dot_bytes``   — lhs + rhs + out bytes per dot (HBM-traffic proxy under
+                    perfect elementwise fusion)
+* collectives     — per-op counts/bytes with ring-effective per-device bytes
+
+All quantities are per-device (the compiled module is the per-device SPMD
+program).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%(?P<name>[^\s=]+)\s*=\s*(?P<type>.+?)\s+"
+    r"(?P<op>[\w-]+)\((?P<args>.*)$")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?(?P<name>[\w\.\-_]+)\s*"
+                        r"\((?P<params>.*)\)\s*->")
+_ARRAY_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-_]+)")
+_COND_BODY_RE = re.compile(
+    r"condition=%?([\w\.\-_]+),\s*body=%?([\w\.\-_]+)")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+
+def _array_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    """All array components of a (possibly tuple) type string."""
+    out = []
+    for m in _ARRAY_RE.finditer(type_str):
+        dt = m.group("dt")
+        if dt not in DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group("dims").split(",") if d]
+        out.append((dt, dims))
+    return out
+
+
+def _prod(dims) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _array_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _split_params(sig: str) -> Dict[str, str]:
+    """'a: f32[2], b: (s32[], f32[4])' -> {a: 'f32[2]', b: '(...)'}"""
+    out = {}
+    depth = 0
+    cur = []
+    parts = []
+    for ch in sig:
+        if ch == "(" :
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    for part in parts:
+        if ":" not in part:
+            continue
+        name, t = part.split(":", 1)
+        out[name.strip().lstrip("%")] = t.strip()
+    return out
+
+
+@dataclass
+class Op:
+    name: str
+    type: str
+    op: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    params: Dict[str, str]
+    ops: List[Op] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" ") and ("->" in line) and ("{" in line):
+            m = _HEADER_RE.match(line.strip())
+            if m:
+                cur = Computation(m.group("name"),
+                                  _split_params(m.group("params")))
+                comps[cur.name] = cur
+                if line.lstrip().startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            op = Op(m.group("name"), m.group("type"), m.group("op"), line)
+            cur.ops.append(op)
+            cur.symbols[op.name] = op.type
+    return comps, entry
+
+
+def _resolve_shape(comp: Computation, operand: str) -> Optional[str]:
+    operand = operand.strip().lstrip("%")
+    if operand in comp.symbols:
+        return comp.symbols[operand]
+    return comp.params.get(operand)
+
+
+def _operands(args: str) -> List[str]:
+    names = []
+    depth = 0
+    cur = []
+    for ch in args:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        if ch == "," and depth == 0:
+            names.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        names.append("".join(cur).strip())
+    return [n for n in names if n.startswith("%")]
+
+
+def _trip_count(comps: Dict[str, Computation], cond_name: str,
+                depth: int = 0) -> int:
+    """Max integer constant reachable in the loop condition (lax.scan bound)."""
+    if depth > 3 or cond_name not in comps:
+        return 1
+    best = 1
+    comp = comps[cond_name]
+    for op in comp.ops:
+        for c in _CONST_RE.finditer(op.line):
+            best = max(best, int(c.group(1)))
+        m = _CALLS_RE.search(op.line)
+        if m:
+            best = max(best, _trip_count(comps, m.group(1), depth + 1))
+    return best
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(len([x for x in m.group(1).split(",") if x.strip()]), 1)
+    return 1
+
+
+def _effective_collective_bytes(op: str, b: float, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if op == "all-gather":
+        return b * (g - 1) / g
+    if op == "all-reduce":
+        return 2 * b * (g - 1) / g
+    if op == "reduce-scatter":
+        return b * (g - 1)
+    if op == "all-to-all":
+        return b * (g - 1) / g
+    return b
+
+
+@dataclass
+class Summary:
+    dot_flops: float = 0.0
+    dot_bytes: float = 0.0
+    collectives: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    loops: List[Tuple[str, int]] = field(default_factory=list)
+    collective_f32_effective: float = 0.0   # f32 share (CPU-dot artifact)
+
+    @property
+    def collective_effective_bytes(self) -> float:
+        return sum(d["effective_bytes"] for d in self.collectives.values())
+
+    @property
+    def collective_raw_bytes(self) -> float:
+        return sum(d["bytes"] for d in self.collectives.values())
+
+    @property
+    def collective_effective_bytes_bf16adj(self) -> float:
+        """XLA:CPU lowers bf16 dots to f32, so collectives on dot outputs /
+        cotangents parse as f32; on TPU they are bf16. Adjusted = halve the
+        f32 share."""
+        return (self.collective_effective_bytes
+                - self.collective_f32_effective / 2.0)
+
+
+def _analyze_comp(comps: Dict[str, Computation], name: str, mult: float,
+                  s: Summary, seen_depth: int = 0):
+    if name not in comps or seen_depth > 32:
+        return
+    comp = comps[name]
+    for op in comp.ops:
+        kind = op.op
+        if kind == "while":
+            m = _COND_BODY_RE.search(op.line)
+            if m:
+                trips = _trip_count(comps, m.group(1))
+                s.loops.append((op.name, trips))
+                _analyze_comp(comps, m.group(2), mult * trips, s,
+                              seen_depth + 1)
+            continue
+        if kind in ("fusion", "call", "async-start", "custom-call"):
+            m = _CALLS_RE.search(op.line)
+            if m:
+                _analyze_comp(comps, m.group(1), mult, s, seen_depth + 1)
+            continue
+        if kind == "conditional":
+            for m in re.finditer(r"(?:branch_computations=\{([^}]*)\}|"
+                                 r"(?:true|false)_computation=%?([\w\.\-_]+))",
+                                 op.line):
+                names = (m.group(1) or m.group(2) or "").replace("%", "")
+                for n in names.split(","):
+                    if n.strip():
+                        _analyze_comp(comps, n.strip(), mult, s,
+                                      seen_depth + 1)
+            continue
+        if kind in ("dot", "convolution"):
+            outs = _array_dims(op.type)
+            out_elems = 0
+            for _, dims in outs:
+                n = 1
+                for d in dims:
+                    n *= d
+                out_elems += n
+            k = 1
+            mcd = _LHS_CDIMS_RE.search(op.line)
+            ops_list = _operands(op.line.split("(", 1)[1])
+            if mcd and ops_list:
+                lhs_t = _resolve_shape(comp, ops_list[0])
+                if lhs_t:
+                    arrs = _array_dims(lhs_t)
+                    if arrs:
+                        dims = arrs[0][1]
+                        for idx in mcd.group(1).split(","):
+                            if idx and int(idx) < len(dims):
+                                k *= dims[int(idx)]
+            s.dot_flops += mult * 2.0 * out_elems * k
+            b = _type_bytes(op.type)
+            for o in ops_list[:2]:
+                t = _resolve_shape(comp, o)
+                if t:
+                    b += _type_bytes(t)
+            s.dot_bytes += mult * b
+            continue
+        base = kind.replace("-start", "")
+        if base in COLLECTIVE_OPS and not kind.endswith("-done"):
+            b = _type_bytes(op.type)
+            g = _group_size(op.line)
+            d = s.collectives.setdefault(base, {"count": 0.0, "bytes": 0.0,
+                                                "effective_bytes": 0.0})
+            eff = mult * _effective_collective_bytes(base, float(b), g)
+            d["count"] += mult
+            d["bytes"] += mult * b
+            d["effective_bytes"] += eff
+            # f32 share of the payload (per-component within tuples)
+            total_b = max(b, 1)
+            f32_b = sum(
+                int(DTYPE_BYTES[dt] * _prod(dims))
+                for dt, dims in _array_dims(op.type) if dt == "f32")
+            s.collective_f32_effective += eff * f32_b / total_b
+
+
+def analyze_hlo(text: str) -> Summary:
+    comps, entry = parse_module(text)
+    s = Summary()
+    if entry:
+        _analyze_comp(comps, entry, 1.0, s)
+    return s

@@ -1,0 +1,103 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""Dry-run profiler: rank dot ops (flops x trip-count) and collectives with
+their JAX-level op_name metadata, to localize sharding/compute waste.
+
+    PYTHONPATH=src python -m repro.launch.probe --arch qwen3-0.6b \
+        --shape train_4k --mesh pod --top 25
+"""
+
+import argparse
+import re
+from collections import defaultdict
+
+from repro.launch import hlo_analysis as H
+
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def top_ops(text: str, top: int = 25):
+    comps, entry = H.parse_module(text)
+    rows = []
+    colls = []
+
+    def walk(name, mult, depth=0):
+        if name not in comps or depth > 32:
+            return
+        for op in comps[name].ops:
+            kind = op.op
+            if kind == "while":
+                m = H._COND_BODY_RE.search(op.line)
+                if m:
+                    walk(m.group(2), mult * H._trip_count(comps, m.group(1)),
+                         depth + 1)
+                continue
+            if kind in ("fusion", "call", "custom-call", "async-start"):
+                m = H._CALLS_RE.search(op.line)
+                if m:
+                    walk(m.group(1), mult, depth + 1)
+                continue
+            meta = _META_RE.search(op.line)
+            label = meta.group(1) if meta else op.name
+            if kind in ("dot", "convolution"):
+                outs = H._array_dims(op.type)
+                out_elems = sum(int(__import__("numpy").prod(d or [1]))
+                                for _, d in outs)
+                k = 1
+                mcd = H._LHS_CDIMS_RE.search(op.line)
+                ops_list = H._operands(op.line.split("(", 1)[1])
+                if mcd and ops_list:
+                    t = H._resolve_shape(comps[name], ops_list[0])
+                    if t:
+                        arrs = H._array_dims(t)
+                        if arrs:
+                            dims = arrs[0][1]
+                            for idx in mcd.group(1).split(","):
+                                if idx and int(idx) < len(dims):
+                                    k *= dims[int(idx)]
+                rows.append((mult * 2.0 * out_elems * k, mult, op.type[:48],
+                             label))
+            base = kind.replace("-start", "")
+            if base in H.COLLECTIVE_OPS and not kind.endswith("-done"):
+                b = H._type_bytes(op.type)
+                g = H._group_size(op.line)
+                colls.append((mult * H._effective_collective_bytes(
+                    base, float(b), g), mult, base, op.type[:40], label))
+
+    walk(entry, 1.0)
+    rows.sort(key=lambda r: -r[0])
+    colls.sort(key=lambda r: -r[0])
+    return rows[:top], colls[:top]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+    from repro.launch.dryrun import lower_cell
+    compiled, lowered, meta = lower_cell(args.arch, args.shape,
+                                         args.mesh == "multipod")
+    text = compiled.as_text()
+    dots, colls = top_ops(text, args.top)
+    total = sum(r[0] for r in dots)
+    print(f"== top dots (per-device flops x trips) ==")
+    for fl, mult, t, label in dots:
+        print(f"  {fl:12.3e}  x{int(mult):4d}  {t:48s}  {label[:110]}")
+    print(f"== top collectives (effective bytes) ==")
+    for b, mult, kind, t, label in colls:
+        print(f"  {b:12.3e}  x{int(mult):4d}  {kind:18s} {t:40s}  "
+              f"{label[:100]}")
+    ma = compiled.memory_analysis()
+    print(f"mem: args={ma.argument_size_in_bytes/1e9:.2f}GB "
+          f"temp={ma.temp_size_in_bytes/1e9:.2f}GB "
+          f"out={ma.output_size_in_bytes/1e9:.2f}GB "
+          f"alias={ma.alias_size_in_bytes/1e9:.2f}GB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,178 @@
+"""Roofline analysis from a compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), seconds per step on TPU v5e:
+
+    compute    = per_device_HLO_FLOPs / peak_FLOPs_per_chip
+    memory     = per_device_HLO_bytes / HBM_bandwidth
+    collective = per_device_effective_collective_bytes / ICI_link_bandwidth
+
+``cost_analysis()`` provides per-device FLOPs/bytes (the compiled module is
+the per-device SPMD program). Collective bytes are parsed from the compiled
+HLO text; effective per-device bytes use ring formulas:
+
+    all-gather:          out_bytes * (g-1)/g
+    all-reduce:          2 * bytes * (g-1)/g
+    reduce-scatter:      out_bytes * (g-1)         (out is the shard)
+    all-to-all:          bytes * (g-1)/g
+    collective-permute:  bytes
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+# ----------------------------------------------------------------- hardware
+
+PEAK_FLOPS = 197e12          # TPU v5e bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (one link per collective hop)
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shape>\([^)]*\)|\S+?)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\(")
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt = m.group("dt")
+        if dt not in DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(len(ids), 1)
+    return 1
+
+
+@dataclass
+class Collective:
+    op: str
+    out_bytes: int
+    group: int
+
+    @property
+    def effective_bytes(self) -> float:
+        g = max(self.group, 1)
+        b = float(self.out_bytes)
+        if g == 1:
+            return 0.0
+        if self.op == "all-gather":
+            return b * (g - 1) / g
+        if self.op == "all-reduce":
+            return 2 * b * (g - 1) / g
+        if self.op == "reduce-scatter":
+            return b * (g - 1)
+        if self.op == "all-to-all":
+            return b * (g - 1) / g
+        return b                       # collective-permute
+
+
+def parse_collectives(hlo_text: str) -> List[Collective]:
+    out = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        out.append(Collective(op=m.group("op"),
+                              out_bytes=_shape_bytes(m.group("shape")),
+                              group=_group_size(line)))
+    return out
+
+
+def collective_summary(colls: List[Collective]) -> Dict:
+    by_op: Dict[str, Dict[str, float]] = {}
+    for c in colls:
+        d = by_op.setdefault(c.op, {"count": 0, "bytes": 0.0,
+                                    "effective_bytes": 0.0})
+        d["count"] += 1
+        d["bytes"] += c.out_bytes
+        d["effective_bytes"] += c.effective_bytes
+    total = sum(d["effective_bytes"] for d in by_op.values())
+    return {"by_op": by_op, "effective_bytes": total}
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   collective_bytes_per_device: float) -> Dict[str, float]:
+    compute = flops_per_device / PEAK_FLOPS
+    memory = bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / ICI_BW
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", collective), key=lambda kv: kv[1])[0]
+    bound = max(compute, memory, collective)
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "dominant": dominant,
+        # fraction of peak FLOP/s achieved if the dominant term is the wall
+        "roofline_fraction": compute / bound if bound > 0 else 0.0,
+    }
+
+
+# ---------------------------------------------------------- model FLOPs/6ND
+
+def tree_param_count(shapes_tree) -> int:
+    import jax
+    return sum(int(_np_prod(x.shape)) for x in jax.tree.leaves(shapes_tree))
+
+
+def _np_prod(t):
+    n = 1
+    for x in t:
+        n *= int(x)
+    return n
+
+
+def active_param_count(cfg, param_shapes) -> int:
+    """Total params minus the share of routed experts beyond top_k."""
+    import jax
+    total = tree_param_count(param_shapes)
+    if cfg.moe is None:
+        return total
+    routed = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(param_shapes)[0]:
+        names = [str(getattr(e, "key", getattr(e, "name", ""))) for e in path]
+        if "ffn" in names and names[-1] in ("wi", "wo") \
+                and "shared" not in names and "prefix_0" not in names:
+            routed += int(_np_prod(leaf.shape))
+    inactive = routed * (1.0 - cfg.moe.top_k / cfg.moe.num_experts)
+    return int(total - inactive)
+
+
+def model_flops(cfg, shape, param_shapes) -> float:
+    """6*N_active*D for train; 2*N_active*D forward-only (prefill/decode)."""
+    n_active = active_param_count(cfg, param_shapes)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch           # one new token per sequence
+    return 2.0 * n_active * tokens

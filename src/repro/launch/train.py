@@ -1,0 +1,189 @@
+"""Trainer: checkpoint/restart, deterministic batch replay, optional
+carbon-aware (VCC-gated) step pacing, optional int8 gradient compression.
+
+The trainer is the fleet's canonical *flexible workload*: when launched with
+``--carbon-aware`` it consults a VCC-derived hourly capacity gate and shifts
+its step budget toward green hours — the workload-side view of the paper's
+mechanism (cluster-side shaping lives in repro.core).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \
+        --steps 200 --ckpt-dir /tmp/ck --carbon-aware
+
+Fault tolerance: kill it at any point; relaunching with the same flags
+resumes from the last committed checkpoint and replays the exact batch
+stream (see repro.data). Elastic: checkpoints restore onto a different
+device count.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.configs import get_arch
+from repro.core import carbon as carbon_mod
+from repro.data import DataConfig, batch_at
+from repro.launch.mesh import make_local_mesh
+from repro.models import build_model
+from repro.optim import AdamWConfig, init_opt_state
+from repro.optim.compression import init_error_feedback, roundtrip
+from repro.sharding import batch_pspecs, param_pspecs, shardings
+from repro.sharding.act import activation_sharding
+from repro.training import make_train_step
+
+
+class CarbonGate:
+    """Hourly step-budget gate derived from a (simulated) VCC curve."""
+
+    def __init__(self, seed: int = 0):
+        zone = carbon_mod.default_zones(1)[0]
+        intensity = carbon_mod.simulate_zone(jax.random.PRNGKey(seed), zone,
+                                             1)[0]
+        # flexible capacity fraction: inverse-rank of carbon intensity,
+        # conserving the daily budget (mean == 1.0) — a 1-cluster VCC.
+        inv = 1.0 / np.clip(np.asarray(intensity), 1e-3, None)
+        self.capacity = inv / inv.mean()
+        self.intensity = np.asarray(intensity)
+
+    def steps_for_hour(self, hour: int, base: int) -> int:
+        return max(0, int(round(base * self.capacity[hour % 24])))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--carbon-aware", action="store_true")
+    ap.add_argument("--steps-per-hour", type=int, default=20)
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--kill-at-step", type=int, default=-1,
+                    help="fault injection: hard-exit at this step")
+    ap.add_argument("--step-deadline-s", type=float, default=0.0,
+                    help="straggler mitigation: steps exceeding this wall "
+                         "time are logged as straggler events (a real pod "
+                         "runner would preempt/replace the slow host; the "
+                         "deterministic pipeline makes replay safe)")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    arch = get_arch(args.arch)
+    cfg = (arch.smoke if args.smoke else arch.config).replace(remat="none")
+    model = build_model(cfg)
+    opt_cfg = AdamWConfig(peak_lr=args.lr, warmup_steps=20,
+                          decay_steps=max(args.steps, 100))
+    mesh = make_local_mesh()
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch)
+
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = init_opt_state(params, opt_cfg)
+    p_sh = shardings(param_pspecs(cfg, jax.eval_shape(lambda: params), mesh),
+                     mesh)
+    ef = init_error_feedback(params) if args.compress else None
+
+    base_step_fn = make_train_step(model, opt_cfg)
+    if args.compress:
+        from repro.optim import adamw_update
+
+        def step_fn(params, opt_state, batch, ef):
+            def loss_fn(p):
+                return model.loss(p, batch)
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            grads, ef = roundtrip(grads, ef)
+            params, opt_state, om = adamw_update(params, grads, opt_state,
+                                                 opt_cfg)
+            metrics = dict(metrics)
+            metrics.update(om)
+            metrics["loss"] = loss
+            return params, opt_state, metrics, ef
+
+        jit_step = jax.jit(step_fn, donate_argnums=(0, 1, 3))
+    else:
+        jit_step = jax.jit(base_step_fn, donate_argnums=(0, 1))
+
+    start = 0
+    if args.ckpt_dir:
+        last = ckpt.latest_step(args.ckpt_dir)
+        if last is not None:
+            tree = {"params": params, "opt": opt_state}
+            restored = ckpt.restore(args.ckpt_dir, last,
+                                    jax.eval_shape(lambda: tree))
+            params, opt_state = restored["params"], restored["opt"]
+            start = last
+            print(f"[train] resumed from step {start}")
+
+    gate = CarbonGate() if args.carbon_aware else None
+    step = start
+    hour = start // max(args.steps_per_hour, 1)
+    t0 = time.time()
+    losses = []
+    with activation_sharding(mesh):
+        while step < args.steps:
+            if gate is not None:
+                budget = gate.steps_for_hour(hour, args.steps_per_hour)
+            else:
+                budget = args.steps_per_hour
+            for _ in range(budget):
+                if step >= args.steps:
+                    break
+                batch = {k: jnp.asarray(v)
+                         for k, v in batch_at(dcfg, step).items()}
+                if cfg.family == "vlm":
+                    batch["vision_embeds"] = jnp.zeros(
+                        (args.batch, cfg.vision_tokens, cfg.d_model),
+                        jnp.dtype(cfg.dtype))
+                if cfg.family == "encdec":
+                    batch["frames"] = jnp.zeros(
+                        (args.batch, cfg.encoder_seq, cfg.d_model),
+                        jnp.dtype(cfg.dtype))
+                ts = time.time()
+                if args.compress:
+                    params, opt_state, metrics, ef = jit_step(
+                        params, opt_state, batch, ef)
+                else:
+                    params, opt_state, metrics = jit_step(params, opt_state,
+                                                          batch)
+                if args.step_deadline_s and step > start + 1 \
+                        and time.time() - ts > args.step_deadline_s:
+                    print(f"[train] STRAGGLER step={step + 1} took "
+                          f"{time.time() - ts:.2f}s "
+                          f"(deadline {args.step_deadline_s}s)")
+                step += 1
+                if step == args.kill_at_step:
+                    print(f"[train] fault injection: dying at step {step}")
+                    import os
+                    os._exit(42)
+                if step % args.log_every == 0:
+                    loss = float(metrics["loss"])
+                    losses.append(loss)
+                    rate = (step - start) / (time.time() - t0)
+                    extra = (f" hour={hour % 24:02d} budget={budget}"
+                             if gate else "")
+                    print(f"[train] step={step} loss={loss:.4f} "
+                          f"steps/s={rate:.2f}{extra}")
+                if args.ckpt_dir and step % args.ckpt_every == 0:
+                    ckpt.save(args.ckpt_dir, step,
+                              {"params": params, "opt": opt_state},
+                              async_=False)
+            hour += 1
+    if args.ckpt_dir:
+        ckpt.save(args.ckpt_dir, step, {"params": params, "opt": opt_state})
+    print(f"[train] done at step {step}; final loss "
+          f"{losses[-1] if losses else float('nan'):.4f}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.models.model import (build_model, param_specs, cache_specs,
+                                batch_specs, decode_specs, input_specs)
+
+__all__ = ["build_model", "param_specs", "cache_specs", "batch_specs",
+           "decode_specs", "input_specs"]

@@ -1,0 +1,193 @@
+"""Whisper-style encoder-decoder (conv/mel frontend is a stub: the encoder
+consumes precomputed frame embeddings from ``input_specs()``).
+
+Pre-LN LayerNorm blocks, GELU MLPs, sinusoidal absolute positions (decoder
+positions sinusoidal instead of Whisper's 448 learned ones — DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.flash_attention import ops as attn_ops
+from repro.models import layers as L
+from repro.models.transformer import _dtype, _remat, _stack_init, _pad_kv_to
+from repro.sharding.act import constrain
+
+f32 = jnp.float32
+
+
+def _ln(x, p, eps):
+    return L.layer_norm(x, p["scale"], p["bias"], eps)
+
+
+def _init_attn(key, cfg, dtype):
+    a = cfg.attn
+    D, N, H = cfg.d_model, a.num_heads, a.head_dim
+    ks = jax.random.split(key, 4)
+    return {"wq": L.dense_init(ks[0], (D, N, H), (0,), dtype),
+            "wk": L.dense_init(ks[1], (D, N, H), (0,), dtype),
+            "wv": L.dense_init(ks[2], (D, N, H), (0,), dtype),
+            "wo": L.dense_init(ks[3], (N, H, D), (0, 1), dtype)}
+
+
+def _attn(p, x_q, x_kv, *, causal, q_offset=0, length=None, kv=None):
+    """Self- or cross-attention. kv: optional precomputed (k, v)."""
+    q = jnp.einsum("bsd,dnh->bsnh", x_q, p["wq"])
+    if kv is None:
+        k = jnp.einsum("bsd,dnh->bsnh", x_kv, p["wk"])
+        v = jnp.einsum("bsd,dnh->bsnh", x_kv, p["wv"])
+    else:
+        k, v = kv
+    o = attn_ops.attention(q, k, v, causal=causal, q_offset=q_offset,
+                           length=length)
+    return jnp.einsum("bsnh,nhd->bsd", o, p["wo"]), (k, v)
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.family == "encdec"
+        self.cfg = cfg
+
+    # ---------------- params
+    def init(self, key):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        keys = jax.random.split(key, 3)
+
+        def init_enc(k):
+            k1, k2 = jax.random.split(k)
+            return {"ln1": L.init_ln(cfg.d_model),
+                    "attn": _init_attn(k1, cfg, dt),
+                    "ln2": L.init_ln(cfg.d_model),
+                    "ffn": L.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.act,
+                                      dt)}
+
+        def init_dec(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {"ln1": L.init_ln(cfg.d_model),
+                    "self": _init_attn(k1, cfg, dt),
+                    "ln2": L.init_ln(cfg.d_model),
+                    "cross": _init_attn(k2, cfg, dt),
+                    "ln3": L.init_ln(cfg.d_model),
+                    "ffn": L.init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.act,
+                                      dt)}
+
+        return {
+            "embed": L.embed_init(keys[0], cfg.vocab_size, cfg.d_model, dt),
+            "enc_stack": _stack_init(init_enc, keys[1], cfg.encoder_layers),
+            "enc_norm": L.init_ln(cfg.d_model),
+            "dec_stack": _stack_init(init_dec, keys[2], cfg.num_layers),
+            "dec_norm": L.init_ln(cfg.d_model),
+        }
+
+    # ---------------- encoder
+    def encode(self, p, frames):
+        cfg = self.cfg
+        S = frames.shape[1]
+        pos = L.sinusoidal_positions(jnp.arange(S), cfg.d_model)
+        x = frames + pos[None].astype(frames.dtype)
+
+        def body(x, lp):
+            x = constrain(x, "batch", None, None)
+            h = _ln(x, lp["ln1"], cfg.norm_eps)
+            a, _ = _attn(lp["attn"], h, h, causal=False)
+            x = x + a
+            h = _ln(x, lp["ln2"], cfg.norm_eps)
+            return x + L.apply_mlp(lp["ffn"], h, cfg.act), None
+
+        x, _ = jax.lax.scan(_remat(body, cfg), x, p["enc_stack"])
+        return _ln(x, p["enc_norm"], cfg.norm_eps)
+
+    # ---------------- decoder
+    def decode_full(self, p, tokens, enc_out, *, collect_kv=False):
+        cfg = self.cfg
+        S = tokens.shape[1]
+        pos = L.sinusoidal_positions(jnp.arange(S), cfg.d_model)
+        x = p["embed"][tokens] + pos[None].astype(_dtype(cfg))
+
+        def body(x, lp):
+            x = constrain(x, "batch", None, None)
+            h = _ln(x, lp["ln1"], cfg.norm_eps)
+            a, skv = _attn(lp["self"], h, h, causal=True)
+            x = x + a
+            h = _ln(x, lp["ln2"], cfg.norm_eps)
+            a, ckv = _attn(lp["cross"], h, enc_out, causal=False)
+            x = x + a
+            h = _ln(x, lp["ln3"], cfg.norm_eps)
+            x = x + L.apply_mlp(lp["ffn"], h, cfg.act)
+            return x, (skv, ckv) if collect_kv else None
+
+        x, kvs = jax.lax.scan(_remat(body, cfg), x, p["dec_stack"])
+        x = _ln(x, p["dec_norm"], cfg.norm_eps)
+        return (x, kvs) if collect_kv else x
+
+    # ---------------- training
+    def loss(self, p, batch):
+        tokens = batch["tokens"]
+        enc_out = self.encode(p, batch["frames"])
+        x = self.decode_full(p, tokens[:, :-1], enc_out)
+        return L.chunked_xent(x, p["embed"], tokens[:, 1:])
+
+    # ---------------- serving
+    def init_cache(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        a = cfg.attn
+        dt = _dtype(cfg)
+        Ld, Le = cfg.num_layers, cfg.encoder_seq
+        kv = lambda s: jnp.zeros((Ld, batch, s, a.num_heads, a.head_dim), dt)
+        return {"self_k": kv(max_seq), "self_v": kv(max_seq),
+                "cross_k": kv(Le), "cross_v": kv(Le)}
+
+    def prefill(self, p, batch, max_seq: int):
+        cfg = self.cfg
+        enc_out = self.encode(p, batch["frames"])
+        x, kvs = self.decode_full(p, batch["tokens"], enc_out,
+                                  collect_kv=True)
+        (sk, sv), (ck, cv) = kvs
+        cache = {"self_k": _pad_kv_to(sk, max_seq, axis=2),
+                 "self_v": _pad_kv_to(sv, max_seq, axis=2),
+                 "cross_k": ck, "cross_v": cv}
+        logits = jnp.einsum("bd,vd->bv", x[:, -1].astype(f32),
+                            p["embed"].astype(f32))
+        return logits, cache
+
+    def decode_step(self, p, cache, token, pos):
+        cfg = self.cfg
+        posemb = L.sinusoidal_positions(pos[None] if jnp.ndim(pos) == 0
+                                        else pos, cfg.d_model)
+        x = p["embed"][token[:, None]] + posemb[None].astype(_dtype(cfg))
+
+        def body(x, inp):
+            lp, sk, sv, ck, cv = inp
+            h = _ln(x, lp["ln1"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dnh->bsnh", h, lp["self"]["wq"])
+            k = jnp.einsum("bsd,dnh->bsnh", h, lp["self"]["wk"])
+            v = jnp.einsum("bsd,dnh->bsnh", h, lp["self"]["wv"])
+            sk = jax.lax.dynamic_update_slice(sk, k.astype(sk.dtype),
+                                              (0, pos, 0, 0))
+            sv = jax.lax.dynamic_update_slice(sv, v.astype(sv.dtype),
+                                              (0, pos, 0, 0))
+            o = attn_ops.attention(q, sk, sv, causal=True, q_offset=pos,
+                                   length=pos + 1)
+            x = x + jnp.einsum("bsnh,nhd->bsd", o, lp["self"]["wo"])
+            h = _ln(x, lp["ln2"], cfg.norm_eps)
+            a, _ = _attn(lp["cross"], h, None, causal=False, kv=(ck, cv))
+            x = x + a
+            h = _ln(x, lp["ln3"], cfg.norm_eps)
+            x = x + L.apply_mlp(lp["ffn"], h, cfg.act)
+            return x, (sk, sv)
+
+        x, (nsk, nsv) = jax.lax.scan(
+            body, x, (p["dec_stack"], cache["self_k"], cache["self_v"],
+                      cache["cross_k"], cache["cross_v"]))
+        x = _ln(x, p["dec_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bd,vd->bv", x[:, 0].astype(f32),
+                            p["embed"].astype(f32))
+        return logits, {"self_k": nsk, "self_v": nsv,
+                        "cross_k": cache["cross_k"],
+                        "cross_v": cache["cross_v"]}

@@ -1,0 +1,172 @@
+"""Shared model building blocks: norms, RoPE, MLPs, embeddings, chunked loss."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.act import constrain
+
+
+# ---------------------------------------------------------------- init utils
+
+def dense_init(key, shape, in_axes=(0,), dtype=jnp.bfloat16, scale=1.0):
+    """Truncated-normal init with stddev scale/sqrt(fan_in)."""
+    fan_in = 1
+    for a in in_axes:
+        fan_in *= shape[a]
+    std = scale * (fan_in ** -0.5)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, (vocab, d), jnp.float32)
+            * (d ** -0.5)).astype(dtype)
+
+
+# --------------------------------------------------------------------- norms
+
+def rms_norm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def group_norm_heads(x, scale, bias, eps=1e-5):
+    """Per-head layernorm (RWKV 'ln_x'). x: (..., H, hd); scale/bias: (H, hd)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def init_rms(d, dtype=jnp.float32):
+    return jnp.zeros((d,), dtype)          # rms_norm uses (1 + scale)
+
+
+def init_ln(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+# ---------------------------------------------------------------------- rope
+
+def rope(x, positions, theta: float):
+    """Rotary embedding, llama rotate-half convention.
+    x: (B, S, N, H); positions: (S,) or (B, S)."""
+    if theta == 0.0:
+        return x
+    B, S, N, H = x.shape
+    half = H // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    pos = positions.astype(jnp.float32)
+    if pos.ndim == 1:
+        pos = pos[None, :]
+    ang = pos[:, :, None] * freqs[None, None, :]        # (B|1, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., :half], xf[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions, d, base: float = 10_000.0):
+    """Whisper-style sinusoidal embeddings. positions: (S,) -> (S, d)."""
+    half = d // 2
+    freqs = base ** (-jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ----------------------------------------------------------------------- mlp
+
+def init_mlp(key, d_model, d_ff, act: str, dtype=jnp.bfloat16):
+    k1, k2 = jax.random.split(key)
+    gated = act in ("swiglu", "geglu")
+    wi = dense_init(k1, (d_model, (2 if gated else 1) * d_ff), (0,), dtype)
+    wo = dense_init(k2, (d_ff, d_model), (0,), dtype)
+    return {"wi": wi, "wo": wo}
+
+
+def apply_mlp(p, x, act: str):
+    h = jnp.einsum("...d,df->...f", x, p["wi"])
+    if act in ("swiglu", "geglu"):
+        g, u = jnp.split(h, 2, axis=-1)
+        g = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+        h = g * u
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    elif act == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(act)
+    return jnp.einsum("...f,fd->...d", h, p["wo"])
+
+
+# -------------------------------------------------------- chunked vocab loss
+
+def chunked_xent(hidden, head, labels, *, mask=None,
+                 logit_softcap: Optional[float] = None,
+                 chunk: int = 512, z_loss: float = 1e-4):
+    """Cross-entropy over a large vocab without materializing full logits.
+
+    hidden: (B, S, D); head: (V, D) (unembedding / tied embedding matrix);
+    labels: (B, S) int32; mask: (B, S) float/bool or None. Scans over
+    S-chunks; each chunk's logits (B, chunk, V) are transient (remat-like
+    memory profile). Returns (mean_loss, metrics dict).
+    """
+    B, S, D = hidden.shape
+    pad = (-S) % chunk
+    nc = (S + pad) // chunk
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    mask = mask.astype(jnp.float32)
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    hs = hidden.reshape(B, nc, chunk, D).swapaxes(0, 1)
+    ls = labels.reshape(B, nc, chunk).swapaxes(0, 1)
+    ms = mask.reshape(B, nc, chunk).swapaxes(0, 1)
+
+    def body(acc, inp):
+        h, lab, m = inp
+        h = constrain(h, "batch", None, None)
+        logits = jnp.einsum("bsd,vd->bsv", h, head,
+                            preferred_element_type=jnp.float32)
+        logits = constrain(logits, "batch", None, "model")
+        logits = softcap(logits, logit_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        nll = (lse - ll) * m
+        zl = jnp.square(lse) * m
+        correct = (jnp.argmax(logits, -1) == lab) * m
+        return (acc[0] + nll.sum(), acc[1] + zl.sum(),
+                acc[2] + correct.sum(), acc[3] + m.sum()), None
+
+    init = (jnp.zeros((), jnp.float32),) * 4
+    (nll, zl, correct, n), _ = jax.lax.scan(
+        jax.checkpoint(body), init, (hs, ls, ms))
+    n = jnp.maximum(n, 1.0)
+    loss = nll / n + z_loss * zl / n
+    return loss, {"xent": nll / n, "accuracy": correct / n, "tokens": n}

@@ -1,0 +1,79 @@
+"""Unified model API + input specs for every (arch x shape) cell.
+
+``build_model(cfg)`` returns a family-appropriate model object exposing
+``init / loss / prefill / decode_step / init_cache``.
+
+``input_specs(cfg, shape)`` returns jax.ShapeDtypeStruct stand-ins for every
+model input of the lowered step function — weak-type-correct, shardable, no
+device allocation (the dry-run pattern).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.encdec import EncDecLM
+from repro.models.transformer import DecoderLM, RWKVLM, ZambaLM
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return DecoderLM(cfg)
+    if cfg.family == "hybrid":
+        return ZambaLM(cfg)
+    if cfg.family == "ssm":
+        return RWKVLM(cfg)
+    if cfg.family == "encdec":
+        return EncDecLM(cfg)
+    raise ValueError(cfg.family)
+
+
+def param_specs(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs without allocating (eval_shape)."""
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init_cache(batch, max_seq))
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Inputs to loss (train) or prefill. Token counts follow the assigned
+    shape: seq_len is the TOTAL sequence (incl. vision/frame stubs)."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    extra = 1 if shape.kind == "train" else 0
+    if cfg.family == "vlm":
+        s_text = S - cfg.vision_tokens
+        return {"tokens": _sds((B, s_text + extra), jnp.int32),
+                "vision_embeds": _sds((B, cfg.vision_tokens, cfg.d_model),
+                                      dt)}
+    if cfg.family == "encdec":
+        return {"tokens": _sds((B, S + extra), jnp.int32),
+                "frames": _sds((B, cfg.encoder_seq, cfg.d_model), dt)}
+    return {"tokens": _sds((B, S + extra), jnp.int32)}
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(cache, token, pos) specs for one decode step with a seq_len cache."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = cache_specs(cfg, B, S)
+    cache = jax.tree.map(lambda x: _sds(x.shape, x.dtype), cache)
+    return cache, _sds((B,), jnp.int32), _sds((), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """All inputs for the step function selected by shape.kind."""
+    if shape.kind in ("train", "prefill"):
+        return (batch_specs(cfg, shape),)
+    return decode_specs(cfg, shape)

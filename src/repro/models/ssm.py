@@ -1,0 +1,281 @@
+"""Recurrent mixers: Mamba2 (zamba2) and RWKV6 "Finch" (rwkv6).
+
+Both reduce to the chunked gated-linear-attention primitive in
+``repro.kernels.linear_scan`` (Pallas on TPU, chunked XLA elsewhere):
+
+* Mamba2: scalar per-head decay ``exp(-dt * exp(A_log))``; dt folded into v.
+* RWKV6: per-channel data-dependent decay ``exp(-exp(w0 + lora(x)))`` with
+  the "bonus" u term and strict (h_{t-1}) causality.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.linear_scan import ops as gla_ops
+from repro.models import layers as L
+from repro.sharding.act import constrain
+
+
+# ------------------------------------------------------------------- Mamba2
+
+def mamba_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    E = s.expand * cfg.d_model
+    H = E // s.head_dim
+    conv_dim = E + 2 * s.state_dim
+    return E, H, conv_dim
+
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    s = cfg.ssm
+    D = cfg.d_model
+    E, H, conv_dim = mamba_dims(cfg)
+    ks = jax.random.split(key, 3)
+    dt = jnp.exp(jnp.linspace(jnp.log(1e-3), jnp.log(1e-1), H))
+    return {
+        "w_in": L.dense_init(ks[0], (D, 2 * E + 2 * s.state_dim + H), (0,),
+                             dtype),
+        "conv_w": L.dense_init(ks[1], (s.conv_width, conv_dim), (0,), dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(dt)).astype(jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "norm": L.init_rms(E),
+        "w_out": L.dense_init(ks[2], (E, D), (0,), dtype),
+    }
+
+
+def _mamba_proj(p, cfg, x):
+    s = cfg.ssm
+    E, H, _ = mamba_dims(cfg)
+    N = s.state_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z, xin, Bc, Cc, dt = jnp.split(zxbcdt, [E, 2 * E, 2 * E + N,
+                                            2 * E + 2 * N], axis=-1)
+    return z, xin, Bc, Cc, dt
+
+
+def _causal_conv(p, cfg, conv_in, conv_state):
+    """conv_in: (B,S,Cd); conv_state: (B, cw-1, Cd). -> (out, new_state)."""
+    cw = cfg.ssm.conv_width
+    full = jnp.concatenate([conv_state.astype(conv_in.dtype), conv_in], 1)
+    S = conv_in.shape[1]
+    out = sum(full[:, i:i + S] * p["conv_w"][i][None, None]
+              for i in range(cw))
+    out = jax.nn.silu(out + p["conv_b"][None, None])
+    return out, full[:, -(cw - 1):]
+
+
+def _mamba_ssm_inputs(p, cfg, xc, Bc, Cc, dt):
+    s = cfg.ssm
+    E, H, _ = mamba_dims(cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    log_decay = -jnp.exp(p["A_log"]) * dt                      # (B,S,H)
+    xh = xc.reshape(xc.shape[:-1] + (H, s.head_dim))
+    v = xh * dt[..., None].astype(xh.dtype)
+    k = jnp.broadcast_to(Bc[..., None, :],
+                         Bc.shape[:-1] + (H, s.state_dim))
+    q = jnp.broadcast_to(Cc[..., None, :],
+                         Cc.shape[:-1] + (H, s.state_dim))
+    return q, k, v, log_decay, xh
+
+
+def _mamba_out(p, cfg, o, xh, z):
+    E, H, _ = mamba_dims(cfg)
+    o = o + (p["D_skip"][..., None] * xh.astype(jnp.float32)).astype(o.dtype)
+    o = o.reshape(o.shape[:-2] + (E,))
+    o = L.rms_norm(o * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", o, p["w_out"])
+
+
+def mamba_state_shapes(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    E, H, conv_dim = mamba_dims(cfg)
+    return ((batch, s.conv_width - 1, conv_dim),
+            (batch, H, s.state_dim, s.head_dim))
+
+
+def apply_mamba(p, cfg: ModelConfig, x, *, state=None,
+                return_state: bool = False):
+    """x: (B, S, D). state: (conv_state, ssm_state) or None."""
+    B = x.shape[0]
+    cs_shape, _ = mamba_state_shapes(cfg, B)
+    conv_state = state[0] if state is not None else jnp.zeros(cs_shape,
+                                                              x.dtype)
+    ssm_state = state[1] if state is not None else None
+    z, xin, Bc, Cc, dt = _mamba_proj(p, cfg, x)
+    conv_in = jnp.concatenate([xin, Bc, Cc], -1)
+    conv_out, conv_state = _causal_conv(p, cfg, conv_in, conv_state)
+    E = cfg.ssm.expand * cfg.d_model
+    N = cfg.ssm.state_dim
+    xc, Bc, Cc = jnp.split(conv_out, [E, E + N], axis=-1)
+    q, k, v, log_decay, xh = _mamba_ssm_inputs(p, cfg, xc, Bc, Cc, dt)
+    o, ssm_state = gla_ops.gla(q, k, v, log_decay, chunk=cfg.ssm.chunk,
+                               initial_state=ssm_state)
+    y = _mamba_out(p, cfg, o, xh, z)
+    if return_state:
+        return y, (conv_state, ssm_state)
+    return y
+
+
+def apply_mamba_decode(p, cfg: ModelConfig, x, conv_state, ssm_state):
+    """One token. x: (B,1,D); returns (y, conv_state, ssm_state)."""
+    z, xin, Bc, Cc, dt = _mamba_proj(p, cfg, x)
+    conv_in = jnp.concatenate([xin, Bc, Cc], -1)
+    conv_out, conv_state = _causal_conv(p, cfg, conv_in, conv_state)
+    E, N = cfg.ssm.expand * cfg.d_model, cfg.ssm.state_dim
+    xc, Bc, Cc = jnp.split(conv_out, [E, E + N], axis=-1)
+    q, k, v, log_decay, xh = _mamba_ssm_inputs(p, cfg, xc, Bc, Cc, dt)
+    o, ssm_state = gla_ops.gla_step(q[:, 0], k[:, 0], v[:, 0],
+                                    log_decay[:, 0], ssm_state)
+    y = _mamba_out(p, cfg, o[:, None], xh, z)
+    return y, conv_state, ssm_state
+
+
+# -------------------------------------------------------------------- RWKV6
+
+def rwkv_dims(cfg: ModelConfig):
+    hd = cfg.rwkv.head_dim
+    return cfg.d_model // hd, hd
+
+
+def init_rwkv_tmix(key, cfg: ModelConfig, dtype):
+    r = cfg.rwkv
+    D = cfg.d_model
+    H, hd = rwkv_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "mu_x": jnp.full((D,), 0.5, jnp.float32),
+        "mu": jnp.full((5, D), 0.5, jnp.float32),
+        "mix_w1": L.dense_init(ks[0], (D, 5 * r.mix_lora), (0,), jnp.float32),
+        "mix_w2": jnp.zeros((5, r.mix_lora, D), jnp.float32),
+        "w0": jnp.linspace(-6.0, 0.0, D).astype(jnp.float32),
+        "w1": L.dense_init(ks[1], (D, r.decay_lora), (0,), jnp.float32),
+        "w2": jnp.zeros((r.decay_lora, D), jnp.float32),
+        "u": (jax.random.normal(ks[2], (H, hd)) * 0.1).astype(jnp.float32),
+        "wr": L.dense_init(ks[3], (D, D), (0,), dtype),
+        "wk": L.dense_init(ks[4], (D, D), (0,), dtype),
+        "wv": L.dense_init(ks[5], (D, D), (0,), dtype),
+        "wg": L.dense_init(ks[6], (D, D), (0,), dtype),
+        "ln_x": {"scale": jnp.ones((H, hd), jnp.float32),
+                 "bias": jnp.zeros((H, hd), jnp.float32)},
+        "wo": L.dense_init(ks[7], (D, D), (0,), dtype),
+    }
+
+
+def init_rwkv_cmix(key, cfg: ModelConfig, dtype):
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((D,), 0.5, jnp.float32),
+        "mu_r": jnp.full((D,), 0.5, jnp.float32),
+        "wk": L.dense_init(ks[0], (D, F), (0,), dtype),
+        "wv": L.dense_init(ks[1], (F, D), (0,), dtype),
+        "wr": L.dense_init(ks[2], (D, D), (0,), dtype),
+    }
+
+
+def _shift(x, x_prev):
+    """Token shift: y_t = x_{t-1}; y_0 = x_prev (B,1,D) carry."""
+    return jnp.concatenate([x_prev.astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def apply_rwkv_tmix(p, cfg: ModelConfig, x, *, shift_state=None,
+                    wkv_state=None, return_state: bool = False):
+    """x: (B, S, D). shift_state: (B,1,D); wkv_state: (B,H,hd,hd)."""
+    r = cfg.rwkv
+    B, S, D = x.shape
+    H, hd = rwkv_dims(cfg)
+    if shift_state is None:
+        shift_state = jnp.zeros((B, 1, D), x.dtype)
+    xx = _shift(x, shift_state) - x
+    xxx = x + xx * p["mu_x"].astype(x.dtype)
+    mix = jnp.tanh(jnp.einsum("bsd,dm->bsm", xxx, p["mix_w1"].astype(x.dtype)))
+    mix = mix.reshape(B, S, 5, r.mix_lora)
+    mix = jnp.einsum("bsfm,fmd->bsfd", mix, p["mix_w2"].astype(x.dtype))
+    mix = mix + p["mu"].astype(x.dtype)[None, None]
+    xw, xk, xv, xr, xg = [x + xx * mix[:, :, i] for i in range(5)]
+    rr = jnp.einsum("bsd,de->bse", xr, p["wr"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"]).reshape(B, S, H, hd)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"]))
+    # decay LoRA output sharded on D over `model` (H-major blocks align
+    # with the GLA head sharding); without this the backward all-reduces a
+    # replicated (B,S,D) cotangent per layer (§Perf C1)
+    lora = jnp.einsum("bsl,ld->bsd",
+                      jnp.tanh(jnp.einsum("bsd,dl->bsl", xw,
+                                          p["w1"].astype(x.dtype))),
+                      p["w2"].astype(x.dtype))
+    lora = constrain(lora, "batch", None, "model")
+    log_w = -jnp.exp(p["w0"].astype(jnp.float32) + lora.astype(jnp.float32))
+    log_w = constrain(log_w, "batch", None, "model")
+    log_w = log_w.reshape(B, S, H, hd)
+    o, wkv_state = gla_ops.gla(rr, k, v, log_w, bonus=p["u"], strict=True,
+                               chunk=r.chunk, initial_state=wkv_state)
+    o = L.group_norm_heads(o, p["ln_x"]["scale"], p["ln_x"]["bias"],
+                           cfg.norm_eps)
+    o = o.reshape(B, S, D) * g
+    y = jnp.einsum("bsd,de->bse", o, p["wo"])
+    if return_state:
+        return y, (x[:, -1:], wkv_state)
+    return y
+
+
+def apply_rwkv_tmix_decode(p, cfg: ModelConfig, x, shift_state, wkv_state):
+    """One token. x: (B,1,D). Returns (y, new_shift, new_wkv)."""
+    r = cfg.rwkv
+    B, _, D = x.shape
+    H, hd = rwkv_dims(cfg)
+    xx = shift_state.astype(x.dtype) - x
+    xxx = x + xx * p["mu_x"].astype(x.dtype)
+    mix = jnp.tanh(jnp.einsum("bsd,dm->bsm", xxx, p["mix_w1"].astype(x.dtype)))
+    mix = mix.reshape(B, 1, 5, r.mix_lora)
+    mix = jnp.einsum("bsfm,fmd->bsfd", mix, p["mix_w2"].astype(x.dtype))
+    mix = mix + p["mu"].astype(x.dtype)[None, None]
+    xw, xk, xv, xr, xg = [x + xx * mix[:, :, i] for i in range(5)]
+    rr = jnp.einsum("bsd,de->bse", xr, p["wr"]).reshape(B, H, hd)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"]).reshape(B, H, hd)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"]).reshape(B, H, hd)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"]))[:, 0]
+    lora = jnp.einsum("bsl,ld->bsd",
+                      jnp.tanh(jnp.einsum("bsd,dl->bsl", xw,
+                                          p["w1"].astype(x.dtype))),
+                      p["w2"].astype(x.dtype))
+    log_w = -jnp.exp(p["w0"].astype(jnp.float32) + lora.astype(jnp.float32))
+    o, wkv_state = gla_ops.gla_step(rr, k, v, log_w.reshape(B, H, hd),
+                                    wkv_state, bonus=p["u"], strict=True)
+    o = L.group_norm_heads(o, p["ln_x"]["scale"], p["ln_x"]["bias"],
+                           cfg.norm_eps)
+    o = o.reshape(B, D) * g
+    y = jnp.einsum("bd,de->be", o, p["wo"])[:, None]
+    return y, x, wkv_state
+
+
+def apply_rwkv_cmix(p, cfg: ModelConfig, x, *, shift_state=None,
+                    return_state: bool = False):
+    B, S, D = x.shape
+    if shift_state is None:
+        shift_state = jnp.zeros((B, 1, D), x.dtype)
+    xx = _shift(x, shift_state) - x
+    xk = x + xx * p["mu_k"].astype(x.dtype)
+    xr = x + xx * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["wk"])))
+    v = jnp.einsum("bsf,fd->bsd", k, p["wv"])
+    y = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"])) * v
+    if return_state:
+        return y, x[:, -1:]
+    return y
+
+
+def apply_rwkv_cmix_decode(p, cfg: ModelConfig, x, shift_state):
+    xx = shift_state.astype(x.dtype) - x
+    xk = x + xx * p["mu_k"].astype(x.dtype)
+    xr = x + xx * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["wk"])))
+    v = jnp.einsum("bsf,fd->bsd", k, p["wv"])
+    y = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"])) * v
+    return y, x

@@ -1,0 +1,557 @@
+"""Decoder LM assembly: dense / MoE / VLM (DecoderLM), hybrid Mamba2+shared
+attention (ZambaLM), and attention-free RWKV6 (RWKVLM).
+
+All stacks scan over stacked per-layer params (small HLO, fast compile) with a
+configurable remat policy. Every model exposes:
+
+    init(key) -> params
+    forward(params, batch) -> final hidden states
+    loss(params, batch) -> (loss, metrics)
+    init_cache(batch_size, max_seq) -> decode cache
+    prefill(params, batch, max_seq) -> (last-token logits, cache)
+    decode_step(params, cache, token, pos) -> (logits, new cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.sharding.act import constrain
+
+f32 = jnp.float32
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _stack_init(fn, key, n):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+# =====================================================================
+# Generic decoder block (attention-or-MLA mixer, MLP-or-MoE ffn)
+# =====================================================================
+
+def init_block(key, cfg: ModelConfig, *, ffn: str):
+    dt = _dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": L.init_rms(cfg.d_model), "ln2": L.init_rms(cfg.d_model)}
+    if cfg.post_norm:
+        p["ln1_post"] = L.init_rms(cfg.d_model)
+        p["ln2_post"] = L.init_rms(cfg.d_model)
+    p["mixer"] = (A.init_mla(k1, cfg, dt) if cfg.mla is not None
+                  else A.init_gqa(k1, cfg, dt))
+    if ffn == "moe":
+        p["ffn"] = M.init_moe(k2, cfg, dt)
+    else:
+        d_ff = cfg.moe.dense_d_ff if (cfg.moe and ffn == "dense_prefix") \
+            else cfg.d_ff
+        p["ffn"] = L.init_mlp(k2, cfg.d_model, d_ff, cfg.act, dt)
+    return p
+
+
+def apply_block(p, cfg: ModelConfig, x, positions, *, ffn: str,
+                window=None, return_kv: bool = False):
+    x = constrain(x, "batch", None, None)
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    kv = None
+    if cfg.mla is not None:
+        out = A.apply_mla(p["mixer"], cfg, h, positions, return_kv=return_kv)
+    else:
+        out = A.apply_gqa(p["mixer"], cfg, h, positions, window=window,
+                          return_kv=return_kv)
+    if return_kv:
+        out, kv = out
+    if cfg.post_norm:
+        out = L.rms_norm(out, p["ln1_post"], cfg.norm_eps)
+    x = x + out
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), f32)
+    if ffn == "moe":
+        out, aux = M.apply_moe(p["ffn"], cfg, h)
+    else:
+        out = L.apply_mlp(p["ffn"], h, cfg.act)
+    if cfg.post_norm:
+        out = L.rms_norm(out, p["ln2_post"], cfg.norm_eps)
+    return x + out, aux, kv
+
+
+def apply_block_decode(p, cfg: ModelConfig, x, cache, pos, *, ffn: str,
+                       window=None):
+    x = constrain(x, "batch", None, None)
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        out, ckv, krope = A.apply_mla_decode(p["mixer"], cfg, h,
+                                             cache["ckv"], cache["krope"],
+                                             pos)
+        new_cache = {"ckv": ckv, "krope": krope}
+    else:
+        out, kc, vc = A.apply_gqa_decode(p["mixer"], cfg, h, cache["k"],
+                                         cache["v"], pos, window=window)
+        new_cache = {"k": kc, "v": vc}
+    if cfg.post_norm:
+        out = L.rms_norm(out, p["ln1_post"], cfg.norm_eps)
+    x = x + out
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if ffn == "moe":
+        out, _ = M.apply_moe(p["ffn"], cfg, h, no_drop=True)
+    else:
+        out = L.apply_mlp(p["ffn"], h, cfg.act)
+    if cfg.post_norm:
+        out = L.rms_norm(out, p["ln2_post"], cfg.norm_eps)
+    return x + out, new_cache
+
+
+def _attn_cache_shapes(cfg: ModelConfig, batch: int, max_seq: int):
+    a = cfg.attn
+    dt = _dtype(cfg)
+    if cfg.mla is not None:
+        return {"ckv": ((batch, max_seq, cfg.mla.kv_lora_rank), dt),
+                "krope": ((batch, max_seq, cfg.mla.rope_head_dim), dt)}
+    return {"k": ((batch, max_seq, a.num_kv_heads, a.head_dim), dt),
+            "v": ((batch, max_seq, a.num_kv_heads, a.head_dim), dt)}
+
+
+def _pad_kv_to(kv, max_seq: int, axis: int = 1):
+    """Pad the sequence axis to max_seq. axis=1 for per-layer (B, S, ...)
+    caches, axis=2 for scan-stacked (L, B, S, ...) caches."""
+    def pad(x):
+        cfgp = [(0, 0)] * x.ndim
+        cfgp[axis] = (0, max_seq - x.shape[axis])
+        return jnp.pad(x, cfgp)
+    return jax.tree.map(pad, kv)
+
+
+# =====================================================================
+# DecoderLM: dense / moe / vlm
+# =====================================================================
+
+class DecoderLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.family in ("dense", "moe", "vlm")
+        self.cfg = cfg
+        self.n_prefix = cfg.moe.first_dense_layers if cfg.moe else 0
+        self.n_stack = cfg.num_layers - self.n_prefix
+        self.stack_ffn = "moe" if cfg.moe else "mlp"
+
+    # ---------------- params
+    def init(self, key):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        keys = jax.random.split(key, 4)
+        p = {"embed": L.embed_init(keys[0], cfg.vocab_size, cfg.d_model, dt),
+             "final_norm": L.init_rms(cfg.d_model)}
+        if not cfg.tie_embeddings:
+            p["lm_head"] = L.embed_init(keys[1], cfg.vocab_size, cfg.d_model,
+                                        dt)
+        for i in range(self.n_prefix):
+            p[f"prefix_{i}"] = init_block(jax.random.fold_in(keys[2], i),
+                                          cfg, ffn="dense_prefix")
+        p["stack"] = _stack_init(
+            functools.partial(init_block, cfg=cfg, ffn=self.stack_ffn),
+            keys[3], self.n_stack)
+        return p
+
+    def _head(self, p):
+        return p["embed"] if self.cfg.tie_embeddings else p["lm_head"]
+
+    def _windows(self):
+        """Per-stack-layer window values (gemma2 local/global alternation)."""
+        cfg = self.cfg
+        if cfg.attn is None or cfg.attn.pattern != "local_global":
+            return None
+        idx = jnp.arange(self.n_stack) + self.n_prefix
+        return jnp.where(idx % 2 == 0, cfg.attn.window, A.GLOBAL_WINDOW)
+
+    def _embed(self, p, tokens, vision_embeds=None):
+        cfg = self.cfg
+        x = p["embed"][tokens]
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        if cfg.family == "vlm" and vision_embeds is not None:
+            x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
+        return x
+
+    # ---------------- full-sequence
+    def forward(self, p, tokens, vision_embeds=None, *, collect_kv=False):
+        cfg = self.cfg
+        x = self._embed(p, tokens, vision_embeds)
+        positions = jnp.arange(x.shape[1])
+        windows = self._windows()
+        aux = jnp.zeros((), f32)
+        prefix_kv = []
+        for i in range(self.n_prefix):
+            x, a, kv = apply_block(p[f"prefix_{i}"], cfg, x, positions,
+                                   ffn="dense_prefix", return_kv=collect_kv)
+            aux = aux + a
+            prefix_kv.append(kv)
+
+        def body(carry, inp):
+            x, aux = carry
+            lp = inp[0]
+            w = inp[1] if windows is not None else None
+            x, a, kv = apply_block(lp, cfg, x, positions, ffn=self.stack_ffn,
+                                   window=w, return_kv=collect_kv)
+            return (x, aux + a), kv
+
+        xs = (p["stack"],) if windows is None else (p["stack"], windows)
+        (x, aux), stack_kv = jax.lax.scan(_remat(body, cfg), (x, aux), xs)
+        x = L.rms_norm(x, p["final_norm"], cfg.norm_eps)
+        if collect_kv:
+            return x, aux, (prefix_kv, stack_kv)
+        return x, aux
+
+    def loss(self, p, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        inputs, labels = tokens[:, :-1], tokens[:, 1:]
+        ve = batch.get("vision_embeds")
+        x, aux = self.forward(p, inputs, ve)
+        if cfg.family == "vlm":
+            tv = cfg.vision_tokens
+            x = x[:, tv - 1:tv - 1 + labels.shape[1]]
+        loss, metrics = L.chunked_xent(x, self._head(p), labels,
+                                       logit_softcap=cfg.logit_softcap)
+        metrics["aux_loss"] = aux
+        return loss + aux, metrics
+
+    # ---------------- decode
+    def init_cache(self, batch: int, max_seq: int):
+        shapes = _attn_cache_shapes(self.cfg, batch, max_seq)
+        mk = lambda sh_dt: jnp.zeros(*sh_dt)
+        cache = {"stack": {k: jnp.zeros((self.n_stack,) + sh, dt)
+                           for k, (sh, dt) in shapes.items()}}
+        for i in range(self.n_prefix):
+            cache[f"prefix_{i}"] = {k: jnp.zeros(sh, dt)
+                                    for k, (sh, dt) in shapes.items()}
+        return cache
+
+    def prefill(self, p, batch, max_seq: int):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        ve = batch.get("vision_embeds")
+        x, _, (prefix_kv, stack_kv) = self.forward(p, tokens, ve,
+                                                   collect_kv=True)
+        cache = {}
+        names = ("ckv", "krope") if cfg.mla is not None else ("k", "v")
+        for i, kv in enumerate(prefix_kv):
+            cache[f"prefix_{i}"] = _pad_kv_to(dict(zip(names, kv)), max_seq,
+                                              axis=1)
+        cache["stack"] = _pad_kv_to(dict(zip(names, stack_kv)), max_seq,
+                                    axis=2)
+        logits = jnp.einsum("bd,vd->bv", x[:, -1].astype(f32),
+                            self._head(p).astype(f32))
+        logits = L.softcap(logits, cfg.logit_softcap)
+        return logits, cache
+
+    def decode_step(self, p, cache, token, pos):
+        """token: (B,) int32; pos: scalar int32 (cache fill position)."""
+        cfg = self.cfg
+        x = self._embed(p, token[:, None])
+        windows = self._windows()
+        for i in range(self.n_prefix):
+            x, nc = apply_block_decode(p[f"prefix_{i}"], cfg, x,
+                                       cache[f"prefix_{i}"], pos,
+                                       ffn="dense_prefix")
+            cache[f"prefix_{i}"] = nc
+
+        def body(x, inp):
+            if windows is not None:
+                lp, lc, w = inp
+            else:
+                (lp, lc), w = inp, None
+            x, nc = apply_block_decode(lp, cfg, x, lc, pos,
+                                       ffn=self.stack_ffn, window=w)
+            return x, nc
+
+        xs = ((p["stack"], cache["stack"]) if windows is None
+              else (p["stack"], cache["stack"], windows))
+        x, new_stack = jax.lax.scan(body, x, xs)
+        cache = dict(cache)
+        cache["stack"] = new_stack
+        x = L.rms_norm(x, p["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bd,vd->bv", x[:, 0].astype(f32),
+                            self._head(p).astype(f32))
+        return L.softcap(logits, cfg.logit_softcap), cache
+
+
+# =====================================================================
+# ZambaLM: Mamba2 backbone + shared attention block (hybrid)
+# =====================================================================
+
+class ZambaLM:
+    """``num_layers`` Mamba2 layers; a single weight-shared transformer block
+    is applied after every ``attn_every`` Mamba2 layers (grouped scan)."""
+
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.family == "hybrid"
+        self.cfg = cfg
+        self.m = cfg.attn_every
+        self.n_groups = cfg.num_layers // self.m
+        self.n_trail = cfg.num_layers - self.n_groups * self.m
+
+    def init(self, key):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        keys = jax.random.split(key, 5)
+        init_m = lambda k: {"ln": L.init_rms(cfg.d_model),
+                            "mamba": S.init_mamba(k, cfg, dt)}
+        p = {
+            "embed": L.embed_init(keys[0], cfg.vocab_size, cfg.d_model, dt),
+            "final_norm": L.init_rms(cfg.d_model),
+            "lm_head": L.embed_init(keys[1], cfg.vocab_size, cfg.d_model, dt),
+            "groups": jax.vmap(lambda ks: jax.vmap(init_m)(ks))(
+                jax.random.split(keys[2],
+                                 self.n_groups * self.m
+                                 ).reshape(self.n_groups, self.m, 2)),
+            "shared": init_block(keys[3], cfg, ffn="mlp"),
+        }
+        if self.n_trail:
+            p["trail"] = _stack_init(init_m, keys[4], self.n_trail)
+        return p
+
+    def _mamba_layer(self, lp, x, state=None, want_state=False):
+        x = constrain(x, "batch", None, None)
+        h = L.rms_norm(x, lp["ln"], self.cfg.norm_eps)
+        if want_state:
+            y, st = S.apply_mamba(lp["mamba"], self.cfg, h, state=state,
+                                  return_state=True)
+            return x + y, st
+        return x + S.apply_mamba(lp["mamba"], self.cfg, h), None
+
+    def forward(self, p, tokens, *, collect=False):
+        cfg = self.cfg
+        x = p["embed"][tokens]
+        positions = jnp.arange(x.shape[1])
+
+        def group(carry, inp):
+            x = carry
+            gp = inp
+
+            def inner(x, lp):
+                x, st = self._mamba_layer(lp, x, want_state=collect)
+                return x, st
+
+            x, states = jax.lax.scan(inner, x, gp)
+            x, _, kv = apply_block(p["shared"], cfg, x, positions, ffn="mlp",
+                                   return_kv=collect)
+            return x, (states, kv)
+
+        x, (g_states, g_kv) = jax.lax.scan(_remat(group, cfg), x,
+                                           p["groups"])
+        t_states = None
+        if self.n_trail:
+            def inner(x, lp):
+                x, st = self._mamba_layer(lp, x, want_state=collect)
+                return x, st
+            x, t_states = jax.lax.scan(inner, x, p["trail"])
+        x = L.rms_norm(x, p["final_norm"], cfg.norm_eps)
+        if collect:
+            return x, (g_states, g_kv, t_states)
+        return x
+
+    def loss(self, p, batch):
+        tokens = batch["tokens"]
+        x = self.forward(p, tokens[:, :-1])
+        loss, metrics = L.chunked_xent(x, p["lm_head"], tokens[:, 1:])
+        return loss, metrics
+
+    def init_cache(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        cs, ss = S.mamba_state_shapes(cfg, batch)
+        ash = _attn_cache_shapes(cfg, batch, max_seq)
+        return {
+            "g_conv": jnp.zeros((self.n_groups, self.m) + cs, dt),
+            "g_ssm": jnp.zeros((self.n_groups, self.m) + ss, f32),
+            "t_conv": jnp.zeros((self.n_trail,) + cs, dt),
+            "t_ssm": jnp.zeros((self.n_trail,) + ss, f32),
+            "attn": {k: jnp.zeros((self.n_groups,) + sh, d)
+                     for k, (sh, d) in ash.items()},
+        }
+
+    def prefill(self, p, batch, max_seq: int):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x, (g_states, g_kv, t_states) = self.forward(p, tokens, collect=True)
+        cache = {
+            "g_conv": g_states[0], "g_ssm": g_states[1],
+            "t_conv": (t_states[0] if self.n_trail
+                       else jnp.zeros((0,), _dtype(cfg))),
+            "t_ssm": (t_states[1] if self.n_trail
+                      else jnp.zeros((0,), f32)),
+            "attn": _pad_kv_to(dict(zip(("k", "v"), g_kv)), max_seq, axis=2),
+        }
+        logits = jnp.einsum("bd,vd->bv", x[:, -1].astype(f32),
+                            p["lm_head"].astype(f32))
+        return logits, cache
+
+    def decode_step(self, p, cache, token, pos):
+        cfg = self.cfg
+        x = p["embed"][token[:, None]]
+
+        def group(x, inp):
+            gp, conv, ssm, kc, vc = inp
+
+            def inner(x, lin):
+                lp, cst, sst = lin
+                h = L.rms_norm(x, lp["ln"], cfg.norm_eps)
+                y, ncst, nsst = S.apply_mamba_decode(lp["mamba"], cfg, h,
+                                                     cst, sst)
+                return x + y, (ncst, nsst)
+
+            x, (nconv, nssm) = jax.lax.scan(inner, x, (gp, conv, ssm))
+            x, ncache = apply_block_decode(p["shared"], cfg, x,
+                                           {"k": kc, "v": vc}, pos,
+                                           ffn="mlp")
+            return x, (nconv, nssm, ncache["k"], ncache["v"])
+
+        x, (g_conv, g_ssm, ak, av) = jax.lax.scan(
+            group, x, (p["groups"], cache["g_conv"], cache["g_ssm"],
+                       cache["attn"]["k"], cache["attn"]["v"]))
+        t_conv, t_ssm = cache["t_conv"], cache["t_ssm"]
+        if self.n_trail:
+            def inner(x, lin):
+                lp, cst, sst = lin
+                h = L.rms_norm(x, lp["ln"], cfg.norm_eps)
+                y, ncst, nsst = S.apply_mamba_decode(lp["mamba"], cfg, h,
+                                                     cst, sst)
+                return x + y, (ncst, nsst)
+            x, (t_conv, t_ssm) = jax.lax.scan(inner, x,
+                                              (p["trail"], cache["t_conv"],
+                                               cache["t_ssm"]))
+        x = L.rms_norm(x, p["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bd,vd->bv", x[:, 0].astype(f32),
+                            p["lm_head"].astype(f32))
+        return logits, {"g_conv": g_conv, "g_ssm": g_ssm, "t_conv": t_conv,
+                        "t_ssm": t_ssm, "attn": {"k": ak, "v": av}}
+
+
+# =====================================================================
+# RWKVLM: attention-free (rwkv6)
+# =====================================================================
+
+class RWKVLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.family == "ssm"
+        self.cfg = cfg
+
+    def init(self, key):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        keys = jax.random.split(key, 4)
+
+        def init_layer(k):
+            k1, k2 = jax.random.split(k)
+            return {"ln1": L.init_ln(cfg.d_model),
+                    "ln2": L.init_ln(cfg.d_model),
+                    "tmix": S.init_rwkv_tmix(k1, cfg, dt),
+                    "cmix": S.init_rwkv_cmix(k2, cfg, dt)}
+
+        return {
+            "embed": L.embed_init(keys[0], cfg.vocab_size, cfg.d_model, dt),
+            "ln0": L.init_ln(cfg.d_model),
+            "final_norm": L.init_ln(cfg.d_model),
+            "lm_head": L.embed_init(keys[1], cfg.vocab_size, cfg.d_model, dt),
+            "stack": _stack_init(init_layer, keys[2], cfg.num_layers),
+        }
+
+    def forward(self, p, tokens, *, collect=False):
+        cfg = self.cfg
+        x = p["embed"][tokens]
+        x = L.layer_norm(x, p["ln0"]["scale"], p["ln0"]["bias"],
+                         cfg.norm_eps)
+
+        def body(x, lp):
+            x = constrain(x, "batch", None, None)
+            h = L.layer_norm(x, lp["ln1"]["scale"], lp["ln1"]["bias"],
+                             cfg.norm_eps)
+            if collect:
+                y, (sh_t, wkv) = S.apply_rwkv_tmix(lp["tmix"], cfg, h,
+                                                   return_state=True)
+            else:
+                y = S.apply_rwkv_tmix(lp["tmix"], cfg, h)
+                sh_t = wkv = jnp.zeros((), f32)
+            x = x + y
+            h = L.layer_norm(x, lp["ln2"]["scale"], lp["ln2"]["bias"],
+                             cfg.norm_eps)
+            if collect:
+                y, sh_c = S.apply_rwkv_cmix(lp["cmix"], cfg, h,
+                                            return_state=True)
+            else:
+                y = S.apply_rwkv_cmix(lp["cmix"], cfg, h)
+                sh_c = jnp.zeros((), f32)
+            return x + y, (sh_t, wkv, sh_c)
+
+        x, states = jax.lax.scan(_remat(body, cfg), x, p["stack"])
+        x = L.layer_norm(x, p["final_norm"]["scale"], p["final_norm"]["bias"],
+                         cfg.norm_eps)
+        if collect:
+            return x, states
+        return x
+
+    def loss(self, p, batch):
+        tokens = batch["tokens"]
+        x = self.forward(p, tokens[:, :-1])
+        return L.chunked_xent(x, p["lm_head"], tokens[:, 1:])
+
+    def init_cache(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        H, hd = S.rwkv_dims(cfg)
+        Lx = cfg.num_layers
+        dt = _dtype(cfg)
+        return {"wkv": jnp.zeros((Lx, batch, H, hd, hd), f32),
+                "shift_t": jnp.zeros((Lx, batch, 1, cfg.d_model), dt),
+                "shift_c": jnp.zeros((Lx, batch, 1, cfg.d_model), dt)}
+
+    def prefill(self, p, batch, max_seq: int):
+        cfg = self.cfg
+        x, (sh_t, wkv, sh_c) = self.forward(p, batch["tokens"], collect=True)
+        cache = {"wkv": wkv, "shift_t": sh_t, "shift_c": sh_c}
+        logits = jnp.einsum("bd,vd->bv", x[:, -1].astype(f32),
+                            p["lm_head"].astype(f32))
+        return logits, cache
+
+    def decode_step(self, p, cache, token, pos):
+        cfg = self.cfg
+        x = p["embed"][token[:, None]]
+        x = L.layer_norm(x, p["ln0"]["scale"], p["ln0"]["bias"], cfg.norm_eps)
+
+        def body(x, inp):
+            lp, wkv, sh_t, sh_c = inp
+            h = L.layer_norm(x, lp["ln1"]["scale"], lp["ln1"]["bias"],
+                             cfg.norm_eps)
+            y, nsh_t, nwkv = S.apply_rwkv_tmix_decode(lp["tmix"], cfg, h,
+                                                      sh_t, wkv)
+            x = x + y
+            h = L.layer_norm(x, lp["ln2"]["scale"], lp["ln2"]["bias"],
+                             cfg.norm_eps)
+            y, nsh_c = S.apply_rwkv_cmix_decode(lp["cmix"], cfg, h, sh_c)
+            return x + y, (nwkv, nsh_t, nsh_c)
+
+        x, (wkv, sh_t, sh_c) = jax.lax.scan(
+            body, x, (p["stack"], cache["wkv"], cache["shift_t"],
+                      cache["shift_c"]))
+        x = L.layer_norm(x, p["final_norm"]["scale"],
+                         p["final_norm"]["bias"], cfg.norm_eps)
+        logits = jnp.einsum("bd,vd->bv", x[:, 0].astype(f32),
+                            p["lm_head"].astype(f32))
+        return logits, {"wkv": wkv, "shift_t": sh_t, "shift_c": sh_c}

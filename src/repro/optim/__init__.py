@@ -1,0 +1,5 @@
+from repro.optim.adamw import (AdamWConfig, adamw_update, global_norm,
+                               init_opt_state, schedule)
+
+__all__ = ["AdamWConfig", "adamw_update", "global_norm", "init_opt_state",
+           "schedule"]

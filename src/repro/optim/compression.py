@@ -1,0 +1,52 @@
+"""Error-feedback int8 gradient compression (distributed-optimization trick).
+
+For cross-pod (DCN) gradient reduction, 4x smaller payloads matter. Each
+gradient leaf is quantized to int8 with a per-leaf scale; the quantization
+residual is carried in an error-feedback buffer so the compression is
+unbiased over time (Seide et al. / EF-SGD style). The compressed
+representative is what a production runner would all-reduce over DCN; here
+compress/decompress wrap the gradient tree inside train_step when enabled.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(grads, ef):
+    """Returns ((int8 tree, scales tree), new error feedback)."""
+
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        scale = jnp.clip(jnp.max(jnp.abs(g)), 1e-12, None) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        err = g - q.astype(jnp.float32) * scale
+        return q, scale, err
+
+    flat, treedef = jax.tree_util.tree_flatten(grads)
+    ef_flat = treedef.flatten_up_to(ef)
+    qs, scales, errs = [], [], []
+    for g, e in zip(flat, ef_flat):
+        q, s, err = one(g, e)
+        qs.append(q)
+        scales.append(s)
+        errs.append(err)
+    unf = jax.tree_util.tree_unflatten
+    return (unf(treedef, qs), unf(treedef, scales)), unf(treedef, errs)
+
+
+def decompress(qtree, scales):
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, qtree,
+                        scales)
+
+
+def roundtrip(grads, ef) -> Tuple:
+    """compress+decompress (what the DCN all-reduce would transport)."""
+    (q, s), ef = compress(grads, ef)
+    return decompress(q, s), ef

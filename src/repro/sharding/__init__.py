@@ -1,0 +1,6 @@
+from repro.sharding.partition import (batch_axes, batch_pspecs, cache_pspecs,
+                                      mesh_axes, opt_pspecs, param_pspecs,
+                                      shardings)
+
+__all__ = ["batch_axes", "batch_pspecs", "cache_pspecs", "mesh_axes",
+           "opt_pspecs", "param_pspecs", "shardings"]

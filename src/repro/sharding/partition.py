@@ -1,0 +1,245 @@
+"""Partitioning rules: params / optimizer state / batches / decode caches.
+
+Mesh axes:
+  - ``model``: tensor/expert parallel (attention heads, ffn, vocab, experts)
+  - ``data``:  data parallel + FSDP for parameters
+  - ``pod``:   (multi-pod only) extra data-parallel axis across pods; params
+    are pod-replicated, optimizer state is additionally sharded over ``pod``
+    (cross-pod ZeRO — cheap DCN traffic only at the optimizer step).
+
+Rules are name/path based over the param trees produced by repro.models.
+Leading stacking axes (scan over layers / groups) are unsharded.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def mesh_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def batch_axes(mesh: Mesh):
+    ax = mesh_axes(mesh)
+    return ("pod", "data") if "pod" in ax else ("data",)
+
+
+def _tp(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+FSDP = "data"
+TP = "model"
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            out.append(str(e.key))
+        elif isinstance(e, jax.tree_util.GetAttrKey):
+            out.append(e.name)
+    return tuple(out)
+
+
+def _core_spec(names: Tuple[str, ...], shape, tp: int,
+               cfg: ModelConfig) -> Tuple:
+    """PartitionSpec entries for the trailing (core) dims of a param."""
+    name = names[-1]
+    parent = names[-2] if len(names) > 1 else ""
+    in_moe = (parent == "ffn" and cfg.moe is not None
+              and "shared" not in names
+              and not any(n.startswith("prefix") for n in names))
+
+    def div(n):   # shardable on model axis?
+        return n % tp == 0
+
+    if name in ("embed", "lm_head"):
+        return (TP, FSDP)
+    if name in ("wq", "wk", "wv") and parent in ("mixer", "attn", "self",
+                                                 "cross"):
+        heads = shape[-2]
+        return (FSDP, TP if div(heads) else None, None)
+    if name == "wo" and parent in ("mixer", "attn", "self", "cross"):
+        heads = shape[-3]
+        return (TP if div(heads) else None, None, FSDP)
+    if name in ("wq_a", "wkv_a"):
+        return (FSDP, None)
+    if name in ("wq_b", "wk_b", "wv_b"):
+        return (FSDP, TP if div(shape[-2]) else None, None)
+    if name == "router":
+        return (FSDP, None)
+    if name == "wi" and in_moe:            # (E, D, 2F)
+        return (TP if div(shape[-3]) else None, FSDP, None)
+    if name == "wo" and in_moe:            # (E, F, D)
+        return (TP if div(shape[-3]) else None, None, FSDP)
+    if name == "wi":                       # dense mlp (D, {1,2}F)
+        return (FSDP, TP if div(shape[-1]) else None)
+    if name == "wo":                       # dense mlp (F, D)
+        return (TP if div(shape[-2]) else None, FSDP)
+    # --- mamba2
+    if name == "w_in":
+        return (FSDP, TP if div(shape[-1]) else None)
+    if name == "conv_w":
+        return (None, TP if div(shape[-1]) else None)
+    if name == "conv_b":
+        return (TP if div(shape[-1]) else None,)
+    if name in ("A_log", "dt_bias", "D_skip"):
+        return (TP if div(shape[-1]) else None,)
+    if name == "norm" and parent == "mamba":
+        return (TP if div(shape[-1]) else None,)
+    if name == "w_out":                    # (E_inner, D)
+        return (TP if div(shape[-2]) else None, FSDP)
+    # --- rwkv6
+    if parent == "tmix" and name in ("wr", "wk", "wv", "wg"):
+        return (FSDP, TP if div(shape[-1]) else None)
+    if parent == "tmix" and name == "wo":
+        return (TP if div(shape[-2]) else None, FSDP)
+    if parent == "cmix" and name == "wk":
+        return (FSDP, TP if div(shape[-1]) else None)
+    if parent == "cmix" and name == "wr":
+        # gate path: replicated output (weight-gather only) so the gated
+        # product with the post-AR value tensor stays replicated — avoids
+        # per-layer (B,S,D) activation all-gathers (§Perf C1)
+        return (FSDP, None)
+    if parent == "cmix" and name == "wv":
+        return (TP if div(shape[-2]) else None, FSDP)
+    if name == "mix_w1":
+        return (FSDP, None)
+    if name == "w1":
+        return (FSDP, None)
+    # everything else (norm scales, biases, loras, u, mu, w0/w2, mix_w2):
+    return tuple(None for _ in shape)
+
+
+def param_pspecs(cfg: ModelConfig, param_shapes, mesh: Mesh):
+    """PartitionSpec tree matching the model's param tree. Every entry is
+    divisibility-sanitized against the mesh (odd vocab sizes etc. fall back
+    to unsharded on that dim)."""
+    tp = _tp(mesh)
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        shape = leaf.shape
+        core = _core_spec(names, shape, tp, cfg)
+        lead = len(shape) - len(core)
+        assert lead >= 0, (names, shape, core)
+        spec = (None,) * lead + tuple(core)
+        clean = []
+        for dim, e in zip(shape, spec):
+            if e is None:
+                clean.append(None)
+                continue
+            axes = e if isinstance(e, tuple) else (e,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            clean.append(e if dim % size == 0 else None)
+        return P(*clean)
+
+    return jax.tree_util.tree_map_with_path(rule, param_shapes)
+
+
+def opt_pspecs(cfg: ModelConfig, param_specs, mesh: Mesh):
+    """Optimizer-moment specs: param spec with FSDP axis widened to
+    ('pod','data') on multi-pod meshes (cross-pod ZeRO)."""
+    if "pod" not in mesh_axes(mesh):
+        return param_specs
+
+    def widen(spec: P):
+        entries = []
+        for e in spec:
+            if e == FSDP:
+                entries.append(("pod", FSDP))
+            else:
+                entries.append(e)
+        return P(*entries)
+
+    return jax.tree_util.tree_map(
+        widen, param_specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in batch_axes(mesh)]))
+
+
+def batch_entry(mesh: Mesh, dim: int):
+    """Batch-axes spec entry iff the dim divides the batch mesh extent."""
+    return batch_axes(mesh) if dim % _batch_size(mesh) == 0 else None
+
+
+def batch_pspecs(batch, mesh: Mesh):
+    """Shard the leading (batch) dim of every batch input."""
+
+    def rule(leaf):
+        return P(*((batch_entry(mesh, leaf.shape[0]),)
+                   + (None,) * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map(rule, batch)
+
+
+def cache_pspecs(cfg: ModelConfig, cache_shapes, mesh: Mesh):
+    """Decode-cache specs.
+
+    KV caches shard kv-heads on `model` when divisible, else head_dim (the
+    sequence axis must stay unsharded: a ``dynamic_update_slice`` at a traced
+    position on a sharded dim forces involuntary full rematerialization in
+    the SPMD partitioner). MLA latent caches are small by design and are
+    model-replicated. Recurrent states shard heads on `model`. Every entry
+    is divisibility-guarded (long_500k has global_batch=1)."""
+    tp = _tp(mesh)
+
+    def be(dim):
+        return batch_entry(mesh, dim)
+
+    def mp(dim):
+        return TP if dim % tp == 0 else None
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        shape = leaf.shape
+        if name in ("k", "v", "self_k", "self_v", "cross_k", "cross_v"):
+            # (..., B, S, K, H) with 0-2 leading stack dims
+            lead = len(shape) - 4
+            if shape[-2] % tp == 0:
+                core = (be(shape[-4]), None, TP, None)
+            else:
+                core = (be(shape[-4]), None, None, mp(shape[-1]))
+            return P(*((None,) * lead + core))
+        if name in ("ckv", "krope"):
+            lead = len(shape) - 3
+            if cfg.flash_decode:
+                # flash-decode (shard_map): sequence-sharded latent cache
+                return P(*((None,) * lead + (be(shape[-3]),
+                                             mp(shape[-2]), None)))
+            # baseline: shard the latent dim (updates only touch S; scores
+            # psum over the sharded latent contraction)
+            return P(*((None,) * lead + (be(shape[-3]), None,
+                                         mp(shape[-1]))))
+        if "conv" in name:
+            lead = len(shape) - 3          # (..., B, cw-1, conv_dim)
+            return P(*((None,) * lead +
+                       (be(shape[-3]), None, mp(shape[-1]))))
+        if name in ("g_ssm", "t_ssm", "wkv"):
+            lead = len(shape) - 4          # (..., B, H, K, V)
+            return P(*((None,) * lead +
+                       (be(shape[-4]), mp(shape[-3]), None, None)))
+        if name in ("shift_t", "shift_c"):
+            lead = len(shape) - 3          # (L, B, 1, D)
+            return P(*((None,) * lead +
+                       (be(shape[-3]), None, mp(shape[-1]))))
+        # fallback: shard nothing
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shapes)
+
+
+def shardings(tree_specs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,40 @@
+"""Step builders shared by the trainer, server and dry-run driver."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import AdamWConfig, adamw_update, init_opt_state
+
+
+def make_train_step(model, opt_cfg: AdamWConfig):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return model.loss(p, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params)
+        params, opt_state, om = adamw_update(params, grads, opt_state,
+                                             opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model, max_seq: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_seq)
+
+    return prefill_step
+
+
+def make_serve_step(model):
+    def serve_step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    return serve_step

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# tests must see exactly ONE device (the dry-run entrypoint forces 512 for
+# itself; never set that globally).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

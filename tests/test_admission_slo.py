@@ -1,0 +1,91 @@
+"""Admission control + SLO feedback semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import admission, slo
+
+
+def _power_fn(u):
+    return 100.0 + 300.0 * u
+
+
+def test_inflexible_never_curtailed():
+    """Design principle: shaping must only impact flexible workload."""
+    n = 3
+    vcc = jnp.zeros((n, 24))            # pathological: zero capacity
+    u_if = jnp.full((n, 24), 2.0)
+    arrivals = jnp.full((n, 24), 1.0)
+    res = admission.run_day(vcc, u_if, arrivals, jnp.full((n, 24), 1.2),
+                            jnp.full((n,), 10.0), jnp.zeros((n,)),
+                            _power_fn, jnp.full((n, 24), 0.3))
+    np.testing.assert_allclose(np.asarray(res.usage_total),
+                               np.asarray(u_if))     # inflexible untouched
+    assert float(res.usage_flex.sum()) == 0.0        # flexible fully queued
+
+
+def test_vcc_caps_reservations():
+    n = 2
+    vcc = jnp.full((n, 24), 5.0)
+    u_if = jnp.full((n, 24), 1.0)
+    arrivals = jnp.full((n, 24), 10.0)              # way more than capacity
+    ratio = jnp.full((n, 24), 1.25)
+    res = admission.run_day(vcc, u_if, arrivals, ratio,
+                            jnp.full((n,), 100.0), jnp.zeros((n,)),
+                            _power_fn, jnp.full((n, 24), 0.3))
+    assert bool(jnp.all(res.reservations <= vcc + 1e-4))
+
+
+def test_queue_conservation():
+    n = 2
+    key = jax.random.PRNGKey(0)
+    vcc = 4.0 + jax.random.uniform(key, (n, 24))
+    u_if = jnp.full((n, 24), 1.0)
+    arrivals = 2.0 * jax.random.uniform(jax.random.fold_in(key, 1), (n, 24))
+    q0 = jnp.asarray([3.0, 0.0])
+    res = admission.run_day(vcc, u_if, arrivals, jnp.full((n, 24), 1.2),
+                            jnp.full((n,), 100.0), q0, _power_fn,
+                            jnp.full((n, 24), 0.3))
+    lhs = np.asarray(q0 + res.arrived)
+    rhs = np.asarray(res.served + res.queue_end)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-5)
+
+
+def test_ample_capacity_serves_everything():
+    n = 2
+    vcc = jnp.full((n, 24), 100.0)
+    u_if = jnp.full((n, 24), 1.0)
+    arrivals = jnp.full((n, 24), 2.0)
+    res = admission.run_day(vcc, u_if, arrivals, jnp.full((n, 24), 1.2),
+                            jnp.full((n,), 200.0), jnp.zeros((n,)),
+                            _power_fn, jnp.full((n, 24), 0.3))
+    np.testing.assert_allclose(float(res.served.sum()),
+                               float(res.arrived.sum()), rtol=1e-6)
+    assert float(res.unmet.sum()) == 0.0
+
+
+def test_slo_two_day_trigger_and_pause():
+    cfg = slo.SLOConfig(pause_days=7)
+    st = slo.init_state(2)
+    res_demand = jnp.asarray([101.0, 50.0])
+    budget = jnp.asarray([100.0, 100.0])
+    unmet = jnp.zeros((2,))
+    st, allowed = slo.update(st, cfg, res_demand, budget, unmet)
+    assert bool(allowed[0]) and bool(allowed[1])     # 1 crowded day: fine
+    st, allowed = slo.update(st, cfg, res_demand, budget, unmet)
+    assert not bool(allowed[0])                      # 2 in a row: paused
+    assert bool(allowed[1])
+    for _ in range(6):
+        st, allowed = slo.update(st, cfg, jnp.zeros((2,)), budget, unmet)
+        assert not bool(allowed[0])
+    st, allowed = slo.update(st, cfg, jnp.zeros((2,)), budget, unmet)
+    assert bool(allowed[0])                          # pause expired
+
+
+def test_violation_rate_accounting():
+    cfg = slo.SLOConfig()
+    st = slo.init_state(1)
+    for i in range(10):
+        unmet = jnp.asarray([1.0 if i < 3 else 0.0])
+        st, _ = slo.update(st, cfg, jnp.zeros((1,)), jnp.ones((1,)), unmet)
+    assert abs(float(slo.violation_rate(st)[0]) - 0.3) < 1e-6

@@ -1,0 +1,57 @@
+from repro.configs import ARCHS, SHAPES, get_arch, list_cells
+
+
+def test_ten_archs_forty_cells():
+    assert len(ARCHS) == 10
+    cells = list_cells()
+    assert len(cells) == 40
+    runnable = [c for c in cells if c[2] is None]
+    assert len(runnable) == 32          # 8 documented long_500k skips
+
+
+def test_assigned_configs_exact():
+    c = get_arch("yi-6b").config
+    assert (c.num_layers, c.d_model, c.d_ff, c.vocab_size) == \
+        (32, 4096, 11008, 64000)
+    assert (c.attn.num_heads, c.attn.num_kv_heads) == (32, 4)
+    c = get_arch("deepseek-67b").config
+    assert (c.num_layers, c.d_model, c.attn.num_heads,
+            c.attn.num_kv_heads, c.d_ff, c.vocab_size) == \
+        (95, 8192, 64, 8, 22016, 102400)
+    c = get_arch("qwen3-0.6b").config
+    assert c.attn.qk_norm and c.tie_embeddings and c.vocab_size == 151936
+    c = get_arch("gemma2-9b").config
+    assert c.attn.pattern == "local_global" and c.logit_softcap == 30.0
+    assert c.attn.attn_softcap == 50.0 and c.vocab_size == 256000
+    c = get_arch("deepseek-moe-16b").config
+    assert (c.moe.num_experts, c.moe.top_k, c.moe.num_shared,
+            c.moe.d_expert) == (64, 6, 2, 1408)
+    c = get_arch("deepseek-v2-236b").config
+    assert (c.moe.num_experts, c.moe.top_k, c.mla.kv_lora_rank) == \
+        (160, 6, 512)
+    assert c.num_layers == 60 and c.d_model == 5120
+    c = get_arch("zamba2-7b").config
+    assert c.family == "hybrid" and c.num_layers == 81 \
+        and c.ssm.state_dim == 64
+    c = get_arch("whisper-base").config
+    assert c.family == "encdec" and c.encoder_layers == 6 \
+        and c.vocab_size == 51865
+    c = get_arch("rwkv6-7b").config
+    assert c.family == "ssm" and c.attn is None and c.vocab_size == 65536
+    c = get_arch("internvl2-2b").config
+    assert c.family == "vlm" and c.vision_tokens == 256
+
+
+def test_subquadratic_runs_long_500k():
+    for name in ("rwkv6-7b", "zamba2-7b"):
+        assert "long_500k" not in get_arch(name).skip_shapes
+    for name in ("yi-6b", "gemma2-9b", "deepseek-v2-236b", "whisper-base"):
+        assert "long_500k" in get_arch(name).skip_shapes
+
+
+def test_shapes():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].kind == "prefill"
+    assert SHAPES["decode_32k"].kind == "decode"
+    assert SHAPES["long_500k"].seq_len == 524_288

@@ -1,0 +1,105 @@
+"""Dry-run machinery on a single-device mesh: sharding specs are
+well-formed, lowering works, and the loop-aware HLO analyzer counts
+scan-trip-multiplied FLOPs/collectives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, SHAPES
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.models import build_model, param_specs
+from repro.optim import AdamWConfig, init_opt_state
+from repro.sharding import param_pspecs, shardings
+from repro.training import make_train_step
+
+
+def _mesh():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         devices=jax.devices()[:1])
+
+
+def test_param_pspecs_cover_all_archs():
+    mesh = _mesh()
+    for name in ("yi-6b", "deepseek-v2-236b", "zamba2-7b", "rwkv6-7b",
+                 "whisper-base", "internvl2-2b"):
+        cfg = get_arch(name).config
+        specs = param_pspecs(cfg, param_specs(cfg), mesh)
+        for (path, spec), (_, leaf) in zip(
+                jax.tree_util.tree_flatten_with_path(
+                    specs, is_leaf=lambda x: hasattr(x, "index"))[0],
+                jax.tree_util.tree_flatten_with_path(param_specs(cfg))[0]):
+            assert len(spec) == len(leaf.shape), (name, path)
+
+
+def test_smoke_train_lowering_and_analysis():
+    mesh = _mesh()
+    cfg = get_arch("yi-6b").smoke
+    model = build_model(cfg)
+    opt_cfg = AdamWConfig()
+    p = param_specs(cfg)
+    o = jax.eval_shape(lambda: init_opt_state(p, opt_cfg))
+    batch = {"tokens": jax.ShapeDtypeStruct((4, 65), jnp.int32)}
+    step = make_train_step(model, opt_cfg)
+    lowered = jax.jit(step).lower(p, o, batch)
+    compiled = lowered.compile()
+    s = analyze_hlo(compiled.as_text())
+    assert s.dot_flops > 0
+    # layer scan must be trip-counted: 2 layers for the smoke config
+    trips = dict(s.loops)
+    assert any(t >= cfg.num_layers for t in trips.values()), s.loops
+    # ideal model flops: 6 * N * D within a factor covering attention +
+    # rematerialization overheads
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(p))
+    tokens = 4 * 64
+    ideal = 6 * n_params * tokens
+    assert s.dot_flops > 0.5 * ideal
+    assert s.dot_flops < 6 * ideal
+
+
+def test_analyzer_counts_collectives_in_loops():
+    import os
+    txt = """
+HloModule test, is_scheduled=true
+
+%body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %p = (s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8]{0} get-tuple-element(%p), index=1
+  %ar = f32[8]{0} all-reduce(%x), replica_groups=[2,4]<=[8], to_apply=%add
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8]) tuple(%ni, %ar)
+}
+
+%cond (p: (s32[], f32[8])) -> pred[] {
+  %p = (s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %a = f32[8]{0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8]) tuple(%z, %a)
+  %w = (s32[], f32[8]) while(%t0), condition=%cond, body=%body
+  ROOT %r = f32[8]{0} get-tuple-element(%w), index=1
+}
+"""
+    s = analyze_hlo(txt)
+    assert s.collectives["all-reduce"]["count"] == 7      # trip-counted
+    assert s.collectives["all-reduce"]["bytes"] == 7 * 32
+
+
+def test_full_config_param_count_sane():
+    """Full-config parameter totals are within 20% of published sizes."""
+    import re
+    expected = {"yi-6b": 6.1e9, "deepseek-67b": 67e9, "qwen3-0.6b": 0.6e9,
+                "gemma2-9b": 9.2e9, "deepseek-moe-16b": 16.4e9,
+                "deepseek-v2-236b": 236e9, "zamba2-7b": 7.2e9,
+                "rwkv6-7b": 7.6e9, "whisper-base": 72e6}
+    for name, want in expected.items():
+        cfg = get_arch(name).config
+        p = param_specs(cfg)
+        n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(p))
+        assert abs(n - want) / want < 0.20, (name, n, want)

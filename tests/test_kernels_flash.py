@@ -1,0 +1,66 @@
+"""Pallas flash-attention kernel vs exact oracle: shape/dtype/feature
+sweep, interpret mode (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import (attention_chunked,
+                                               attention_reference)
+
+CASES = [
+    # B, Sq, N, K, H, causal, window, softcap, dtype
+    (2, 256, 4, 2, 64, True, None, None, jnp.float32),
+    (1, 200, 8, 8, 32, True, None, 50.0, jnp.float32),
+    (2, 128, 4, 1, 64, True, 64, None, jnp.float32),
+    (1, 256, 2, 2, 128, False, None, None, jnp.float32),
+    (1, 192, 6, 3, 64, True, None, None, jnp.float32),
+    (2, 128, 4, 2, 64, True, None, None, jnp.bfloat16),
+    (1, 320, 4, 4, 96, True, 128, 30.0, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_flash_vs_reference(case):
+    B, Sq, N, K, H, causal, window, softcap, dtype = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, N, H)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Sq, K, H)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Sq, K, H)).astype(dtype)
+    o1 = flash_attention(q, k, v, causal=causal, window=window,
+                         softcap=softcap, qb=64, kb=64, interpret=True)
+    o2 = attention_reference(q, k, v, causal=causal, window=window,
+                             softcap=softcap)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    err = float(jnp.abs(o1.astype(jnp.float32)
+                        - o2.astype(jnp.float32)).max())
+    assert err < tol, (case, err)
+
+
+def test_chunked_equals_reference():
+    """The production XLA path is numerically identical to the oracle."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (2, 300, 4, 32))
+    k = jax.random.normal(ks[1], (2, 300, 2, 32))
+    v = jax.random.normal(ks[2], (2, 300, 2, 32))
+    o1 = attention_chunked(q, k, v, causal=True, q_chunk=128)
+    o2 = attention_reference(q, k, v, causal=True)
+    assert float(jnp.abs(o1 - o2).max()) < 1e-5
+
+
+def test_decode_length_masking():
+    """Cache-length masking: positions >= length must not contribute."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    B, S, N, H = 2, 64, 4, 32
+    q = jax.random.normal(ks[0], (B, 1, N, H))
+    k = jax.random.normal(ks[1], (B, S, N, H))
+    v = jax.random.normal(ks[2], (B, S, N, H))
+    pos = 17
+    o1 = attention_reference(q, k, v, causal=True, q_offset=pos,
+                             length=pos + 1)
+    k2 = k.at[:, pos + 1:].set(999.0)       # garbage beyond length
+    v2 = v.at[:, pos + 1:].set(999.0)
+    o2 = attention_reference(q, k2, v2, causal=True, q_offset=pos,
+                             length=pos + 1)
+    assert float(jnp.abs(o1 - o2).max()) < 1e-6

@@ -1,0 +1,78 @@
+"""GLA (linear_scan) kernel + chunked ref vs sequential oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.linear_scan.kernel import gla_pallas
+from repro.kernels.linear_scan.ref import gla_chunked, gla_naive, gla_step
+
+CASES = [
+    # B, S, H, K, V, mode, chunk
+    (2, 64, 2, 16, 8, "scalar", 16),
+    (1, 96, 3, 8, 16, "vector", 32),
+    (2, 64, 2, 8, 8, "rwkv", 16),
+    (1, 37, 1, 4, 4, "rwkv", 8),        # ragged length
+    (2, 128, 2, 32, 16, "scalar", 64),
+]
+
+
+def _inputs(case, key):
+    B, S, H, K, V, mode, chunk = case
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, S, H, K))
+    k = jax.random.normal(ks[1], (B, S, H, K))
+    v = jax.random.normal(ks[2], (B, S, H, V))
+    if mode == "scalar":
+        ld = -jnp.abs(jax.random.normal(ks[3], (B, S, H))) * 0.7
+        return q, k, v, ld, None, False
+    ld = -jnp.abs(jax.random.normal(ks[3], (B, S, H, K))) * 3.0
+    if mode == "vector":
+        return q, k, v, ld, None, False
+    u = jax.random.normal(ks[4], (H, K))
+    return q, k, v, ld, u, True
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_chunked_vs_naive(case):
+    q, k, v, ld, u, strict = _inputs(case, jax.random.PRNGKey(0))
+    o1, h1 = gla_chunked(q, k, v, ld, bonus=u, strict=strict,
+                         chunk=case[-1])
+    o2, h2 = gla_naive(q, k, v, ld, bonus=u, strict=strict)
+    # fp32 accumulation-order tolerance scales with K and S
+    tol = 2e-4
+    assert float(jnp.abs(o1 - o2).max()) < tol, case
+    assert float(jnp.abs(h1 - h2).max()) < tol, case
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_pallas_vs_naive(case):
+    q, k, v, ld, u, strict = _inputs(case, jax.random.PRNGKey(1))
+    o1, h1 = gla_pallas(q, k, v, ld, bonus=u, strict=strict, chunk=case[-1],
+                        interpret=True)
+    o2, h2 = gla_naive(q, k, v, ld, bonus=u, strict=strict)
+    assert float(jnp.abs(o1 - o2).max()) < 1e-4, case
+    assert float(jnp.abs(h1 - h2).max()) < 1e-4, case
+
+
+def test_chunk_size_invariance():
+    """Output must not depend on the chunk size."""
+    q, k, v, ld, u, strict = _inputs((2, 96, 2, 8, 8, "rwkv", 8),
+                                     jax.random.PRNGKey(2))
+    outs = [gla_chunked(q, k, v, ld, bonus=u, strict=strict, chunk=c)[0]
+            for c in (8, 16, 32, 96)]
+    for o in outs[1:]:
+        assert float(jnp.abs(o - outs[0]).max()) < 5e-5
+
+
+def test_step_matches_sequence():
+    """Streaming gla_step over a sequence == batch gla_naive."""
+    q, k, v, ld, u, strict = _inputs((1, 16, 2, 8, 8, "rwkv", 8),
+                                     jax.random.PRNGKey(3))
+    o_ref, _ = gla_naive(q, k, v, ld, bonus=u, strict=strict)
+    B, S, H, K = q.shape
+    h = jnp.zeros((B, H, K, v.shape[-1]))
+    for t in range(S):
+        o, h = gla_step(q[:, t], k[:, t], v[:, t], ld[:, t], h, bonus=u,
+                        strict=strict)
+        assert float(jnp.abs(o - o_ref[:, t]).max()) < 1e-5, t

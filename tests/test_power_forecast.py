@@ -1,0 +1,105 @@
+"""Power models (paper §III-A: MAPE < 5%) and day-ahead forecasting
+(§III-B): EWMA pipeline, ratio model, quantiles, eq. (3) inflation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import forecast, power
+
+
+def test_pd_fit_mape_under_5pct():
+    key = jax.random.PRNGKey(0)
+    n_pd, t = 32, 24 * 28
+    truth = power.PDTruth(
+        idle_kw=60 + 40 * jax.random.uniform(jax.random.fold_in(key, 1),
+                                             (n_pd,)),
+        slope_kw=250 + 150 * jax.random.uniform(jax.random.fold_in(key, 2),
+                                                (n_pd,)),
+        curve=0.8 + 0.5 * jax.random.uniform(jax.random.fold_in(key, 3),
+                                             (n_pd,)))
+    cpu = 0.2 + 0.6 * jax.random.uniform(jax.random.fold_in(key, 4),
+                                         (n_pd, t))
+    pw = power.simulate_pd_power(jax.random.fold_in(key, 5), truth, cpu)
+    coef, breaks = power.fit_pd_models(cpu, pw)
+    mapes = np.asarray(power.daily_mape_b(coef, breaks, cpu, pw))
+    # paper: daily MAPE < 5% for > 95% of PDs
+    assert (mapes < 0.05).mean() > 0.95, mapes.max()
+
+
+def test_slope_is_derivative():
+    key = jax.random.PRNGKey(1)
+    cpu = jnp.linspace(0.05, 0.95, 500)
+    pw = 100 + 300 * cpu ** 1.2
+    coef, breaks = power.fit_pd_model(cpu, pw)
+    u = jnp.asarray([0.3, 0.6, 0.8])
+    eps = 1e-3
+    fd = (power.pd_power(coef, breaks, u + eps)
+          - power.pd_power(coef, breaks, u - eps)) / (2 * eps)
+    sl = power.pd_slope(coef, breaks, u)
+    np.testing.assert_allclose(np.asarray(fd), np.asarray(sl), rtol=1e-2)
+
+
+def test_usage_fractions_near_constant():
+    key = jax.random.PRNGKey(2)
+    base = jnp.asarray([0.4, 0.3, 0.2, 0.1])[:, None]
+    usage = base * (5.0 + jnp.sin(jnp.arange(200.0))[None]) \
+        * (1 + 0.01 * jax.random.normal(key, (4, 200)))
+    lam = power.usage_fractions(usage)
+    np.testing.assert_allclose(np.asarray(lam), np.asarray(base[:, 0]),
+                               atol=0.01)
+
+
+def _history(days=35, seed=0):
+    rng = np.random.RandomState(seed)
+    hours = np.arange(24)
+    prof = 1 + 0.3 * np.exp(-0.5 * ((hours - 14) / 4.0) ** 2)
+    hist = []
+    for d in range(days):
+        wk = 1 + 0.1 * np.cos(2 * np.pi * (d % 7) / 7)
+        hist.append(5.0 * prof * wk * (1 + 0.03 * rng.randn(24)))
+    return jnp.asarray(np.stack(hist))
+
+
+def test_inflexible_forecast_accuracy():
+    hist = _history()
+    pred = forecast.forecast_inflexible(hist[:-1], jnp.asarray(34 % 7))
+    ape = np.abs(np.asarray(pred) - np.asarray(hist[-1])) \
+        / np.asarray(hist[-1])
+    assert np.median(ape) < 0.10        # paper Fig 7: median < 10%
+
+
+def test_ratio_model_monotone_decreasing():
+    rng = np.random.RandomState(0)
+    usage = jnp.asarray(np.exp(rng.uniform(0, 3, size=500)))
+    res = usage * (1.1 + 0.5 / jnp.sqrt(usage))
+    a, b = forecast.fit_ratio_model(usage, res)
+    r_small = forecast.ratio_at(a, b, jnp.asarray(1.0))
+    r_big = forecast.ratio_at(a, b, jnp.asarray(20.0))
+    assert float(r_big) <= float(r_small)
+    assert float(r_big) >= 1.0          # ratio >= 1 by construction
+
+
+def test_alpha_solves_eq3():
+    """Plugging alpha back into eq. (3) must reproduce Theta."""
+    key = jax.random.PRNGKey(3)
+    uif = 4.0 + jax.random.uniform(key, (24,))
+    tuf = jnp.asarray(30.0)
+    a, b = jnp.asarray(1.4), jnp.asarray(-0.05)
+    theta = jnp.asarray(230.0)
+    alpha = forecast.alpha_inflation(theta, uif, tuf, a, b)
+    u_nom = uif + tuf / 24.0
+    r = forecast.ratio_at(a, b, u_nom)
+    lhs = jnp.sum((uif + alpha * tuf / 24.0) * r)
+    # exact unless alpha hit its [0.5, 4] clip
+    if 0.5 < float(alpha) < 4.0:
+        np.testing.assert_allclose(float(lhs), float(theta), rtol=1e-4)
+
+
+def test_theta_is_97th_quantile_requirement():
+    preds = jnp.full((90,), 100.0)
+    actuals = jnp.asarray(100.0 + np.random.RandomState(0).randn(90) * 5)
+    q = forecast.relative_error_quantile(preds, actuals, 0.97)
+    theta = forecast.theta_requirement(jnp.asarray(100.0), q)
+    # Theta must cover ~97% of historical outcomes
+    covered = (np.asarray(actuals) <= float(theta)).mean()
+    assert covered >= 0.95
