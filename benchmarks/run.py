@@ -6,10 +6,11 @@ import time
 
 def main() -> None:
     t0 = time.time()
-    from benchmarks import fleet_bench, optimizer_scale, roofline_table
+    from benchmarks import (fleet_bench, optimizer_scale, roofline_table,
+                            sim_bench)
     print("name,us_per_call,derived")
     all_rows = []
-    for mod in (fleet_bench, optimizer_scale, roofline_table):
+    for mod in (fleet_bench, optimizer_scale, roofline_table, sim_bench):
         try:
             all_rows += mod.run()
         except Exception as e:  # noqa: BLE001

@@ -1,0 +1,85 @@
+"""Scenario-sweep benchmark: batched engine vs legacy Python day loop.
+
+Emits BENCH_sim.json (repo root) with rollout throughput in fleet-days/sec
+for the vmap-batched engine and the legacy per-day Python loop in
+core/fleet.py, plus the per-scenario summary rows. Registered in run.py.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from repro.core import fleet as F
+from repro.sim import (SimConfig, build_batch, default_library,
+                       rollout_batch, scenario_rows)
+
+BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_sim.json"
+
+
+def _legacy_days_per_sec(n_clusters=8, days=3, seed=1):
+    """Legacy path: mutable FleetState stepped by a Python day loop."""
+    cfg = F.FleetConfig(n_clusters=n_clusters, n_campuses=4, n_zones=4,
+                        lambda_e=0.5, seed=seed)
+    st = F.init_fleet(cfg)
+    st = F.day_cycle(st)               # warm-up day: amortize jit tracing
+    jax.block_until_ready(st.queue)
+    t0 = time.perf_counter()
+    for _ in range(days):
+        st = F.day_cycle(st)
+    jax.block_until_ready(st.queue)
+    wall = time.perf_counter() - t0
+    return days / wall, wall
+
+
+def _batched_days_per_sec(n_clusters=8, days=7, n_scen=4, n_seeds=2,
+                          hist_days=28):
+    cfg = SimConfig(n_clusters=n_clusters, n_campuses=4, n_zones=4,
+                    pds_per_cluster=2, hist_days=hist_days)
+    scens = default_library(days)[:n_scen]
+    seeds = list(range(n_seeds))
+    batch = build_batch(cfg, scens, seeds, days)
+    run = rollout_batch(cfg, days)
+    t0 = time.perf_counter()
+    _, led, _ = run(batch)
+    jax.block_until_ready(led)
+    compile_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    _, led, _ = run(batch)
+    jax.block_until_ready(led)
+    wall = time.perf_counter() - t0
+    fleet_days = n_scen * n_seeds * days
+    rows = scenario_rows(led, [s.name for s in scens], n_seeds)
+    return fleet_days / wall, wall, compile_wall, fleet_days, rows
+
+
+def run():
+    base_dps, base_wall = _legacy_days_per_sec()
+    (bat_dps, bat_wall, compile_wall, fleet_days,
+     rows) = _batched_days_per_sec()
+    speedup = bat_dps / base_dps
+    rec = {
+        "legacy_python_loop_days_per_sec": base_dps,
+        "batched_engine_days_per_sec": bat_dps,
+        "speedup_days_per_sec": speedup,
+        "batched_fleet_days": fleet_days,
+        "batched_steady_wall_s": bat_wall,
+        "batched_compile_wall_s": compile_wall,
+        "legacy_wall_s": base_wall,
+        "scenarios": rows,
+    }
+    BENCH_PATH.write_text(json.dumps(rec, indent=1))
+    out = [
+        ("sim_legacy_days_per_sec", base_dps, "Python day loop, 8 clusters"),
+        ("sim_batched_days_per_sec", bat_dps,
+         f"{fleet_days} fleet-days vmap'd, steady state"),
+        ("sim_batched_speedup", speedup, "target: >= 5x"),
+    ]
+    for r in rows:
+        out.append((f"sim_{r['scenario']}_carbon_saved_pct",
+                    r["carbon_saved_pct"],
+                    f"peakRed={r['peak_reduction_pct']:.2f}% "
+                    f"flex24h={r['flex_within_24h_pct']:.2f}%"))
+    return out

@@ -21,6 +21,16 @@ import jax.numpy as jnp
 f32 = jnp.float32
 
 
+def hour_sum(x: jnp.ndarray) -> jnp.ndarray:
+    """Ordered sum over the trailing 24-hour axis. XLA's `.sum()` picks a
+    batch-extent-dependent accumulation order; daily totals feed SLO
+    thresholds, so they must be bitwise-stable under vmap (sim engine)."""
+    out = x[..., 0]
+    for h in range(1, x.shape[-1]):
+        out = out + x[..., h]
+    return out
+
+
 @dataclass
 class DayResult:
     usage_flex: jnp.ndarray     # (n, 24) flexible CPU usage
@@ -64,8 +74,8 @@ def run_day(vcc, u_if, arrivals, ratio, capacity, queue0, power_fn,
     reservations = usage_total * ratio
     power = jax.vmap(power_fn, in_axes=1, out_axes=1)(usage_total)
     carbon = power * intensity
-    arrived = arrivals.sum(axis=1)
-    served = use_flex.sum(axis=1)
+    arrived = hour_sum(arrivals)
+    served = hour_sum(use_flex)
     # SLO semantics (paper): flexible work completes within 24h. Work that
     # arrived late today may legitimately run tomorrow morning; count as
     # unmet only the backlog growth beyond a late-day allowance.

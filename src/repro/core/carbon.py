@@ -39,13 +39,30 @@ class ZoneConfig:
     demand_amp: float = 0.15       # diurnal demand swing
 
 
+ZONE_FIELDS = ("solar_cap", "wind_cap", "baseload", "coal_share",
+               "weather_vol", "demand_amp")
+
+
+def zone_params(zone: ZoneConfig) -> dict:
+    """ZoneConfig -> dict of f32 scalars (the array-native scenario hook:
+    sim scenarios perturb these before simulation)."""
+    return {k: jnp.asarray(getattr(zone, k), f32) for k in ZONE_FIELDS}
+
+
+def stack_zone_params(zones) -> dict:
+    """Tuple of ZoneConfig -> dict of (n_zones,) arrays for vmapping."""
+    return {k: jnp.asarray([getattr(z, k) for z in zones], f32)
+            for k in ZONE_FIELDS}
+
+
 def _diurnal(hours, peak_hour, width):
     d = jnp.minimum(jnp.abs(hours - peak_hour), 24 - jnp.abs(hours - peak_hour))
     return jnp.exp(-0.5 * (d / width) ** 2)
 
 
-def simulate_zone(key, zone: ZoneConfig, days: int) -> jnp.ndarray:
-    """Hourly average carbon intensity, shape (days, 24), kgCO2e/kWh."""
+def simulate_zone_from(key, zp: dict, days: int) -> jnp.ndarray:
+    """Hourly average carbon intensity from a zone-parameter dict (scalars
+    or traced scalars). Shape (days, 24), kgCO2e/kWh."""
     hours = jnp.arange(24, dtype=f32)
     k1, k2, k3 = jax.random.split(key, 3)
     # AR(1) daily weather states for solar clearness and wind strength
@@ -56,20 +73,31 @@ def simulate_zone(key, zone: ZoneConfig, days: int) -> jnp.ndarray:
             return x, x
         _, xs = jax.lax.scan(step, jnp.zeros(()), eps)
         return xs
-    clear = jax.nn.sigmoid(1.0 + ar1(k1, days, vol=zone.weather_vol * 5))
-    windy = jax.nn.sigmoid(0.5 + ar1(k2, days, vol=zone.weather_vol * 6))
-    demand = 1.0 + zone.demand_amp * (
+    clear = jax.nn.sigmoid(1.0 + ar1(k1, days, vol=zp["weather_vol"] * 5))
+    windy = jax.nn.sigmoid(0.5 + ar1(k2, days, vol=zp["weather_vol"] * 6))
+    demand = 1.0 + zp["demand_amp"] * (
         0.6 * _diurnal(hours, 19.0, 3.5) + 0.4 * _diurnal(hours, 9.0, 2.5))
     solar_shape = _diurnal(hours, 12.5, 2.8)
     wind_noise = 1.0 + 0.15 * jax.random.normal(k3, (days, 24))
-    solar = zone.solar_cap * clear[:, None] * solar_shape[None, :]
-    wind = zone.wind_cap * windy[:, None] * jnp.clip(wind_noise, 0.3, 1.7)
-    green = solar + wind + zone.baseload
+    solar = zp["solar_cap"] * clear[:, None] * solar_shape[None, :]
+    wind = zp["wind_cap"] * windy[:, None] * jnp.clip(wind_noise, 0.3, 1.7)
+    green = solar + wind + zp["baseload"]
     thermal = jnp.maximum(demand[None, :] - green, 0.02)
-    ci_thermal = (zone.coal_share * CI_BY_SOURCE["coal"]
-                  + (1 - zone.coal_share) * CI_BY_SOURCE["gas"])
+    coal = jnp.clip(zp["coal_share"], 0.0, 1.0)
+    ci_thermal = (coal * CI_BY_SOURCE["coal"]
+                  + (1 - coal) * CI_BY_SOURCE["gas"])
     intensity = thermal * ci_thermal / demand[None, :]
     return intensity.astype(f32)
+
+
+def simulate_zone(key, zone: ZoneConfig, days: int) -> jnp.ndarray:
+    """Hourly average carbon intensity, shape (days, 24), kgCO2e/kWh."""
+    return simulate_zone_from(key, zone_params(zone), days)
+
+
+def simulate_zones_from(keys, zps: dict, days: int) -> jnp.ndarray:
+    """Batched over zones: keys (z, 2), zps dict of (z,) -> (z, days, 24)."""
+    return jax.vmap(lambda k, p: simulate_zone_from(k, p, days))(keys, zps)
 
 
 def forecast_day_ahead(key, history: jnp.ndarray, actual_next: jnp.ndarray,

@@ -73,9 +73,8 @@ class FleetState:
 
 # --------------------------------------------------------------- synthesis
 
-def _cluster_truth(key, cfg: FleetConfig):
+def cluster_truth(key, n: int):
     """Latent per-cluster load-generating processes."""
-    n = cfg.n_clusters
     ks = jax.random.split(key, 10)
     capacity = jnp.exp(jax.random.normal(ks[0], (n,)) * 0.4 + 2.3)  # ~10 CPU
     flex_share = jnp.clip(0.08 + 0.5 * jax.random.uniform(ks[1], (n,)),
@@ -94,6 +93,10 @@ def _cluster_truth(key, cfg: FleetConfig):
             "peak_hour": peak_hour, "weekly_amp": weekly_amp,
             "noise": noise, "arr_level": arr_level,
             "ratio_a": ratio_a, "ratio_b": ratio_b}
+
+
+def _cluster_truth(key, cfg: FleetConfig):
+    return cluster_truth(key, cfg.n_clusters)
 
 
 def _sample_inflexible(key, truth, day):
@@ -188,63 +191,87 @@ def init_fleet(cfg: FleetConfig) -> FleetState:
     return state
 
 
-def make_power_fn(state: FleetState):
-    """Cluster power from PD piecewise models fit on recent history."""
-    n = state.cfg.n_clusters
-    npd = state.cfg.pds_per_cluster
-    # build PD-level training data from cluster usage history
-    u_cl = state.hist_usage[:, -28:].reshape(n, -1)          # (n, t)
-    u_pd = (state.lam[..., None] * u_cl[:, None, :]).reshape(n * npd, -1)
-    u_norm = u_pd / jnp.clip(
-        state.truth["capacity"][:, None, None].repeat(npd, 1).reshape(
-            n * npd, 1), 1e-6, None)
-    key = jax.random.PRNGKey(state.day)
-    p_pd = power.simulate_pd_power(key, state.pd_truth, u_norm)
-    coef, breaks = power.fit_pd_models(u_norm, p_pd)
+def power_model_from_history(hist_usage, lam, capacity, pd_truth, key):
+    """Pure core of make_power_fn: fit PD piecewise power models on recent
+    cluster usage history and return cluster power/slope closures.
 
-    cap_pd = state.truth["capacity"][:, None].repeat(npd, 1).reshape(-1)
+    hist_usage: (n, hist, 24); lam: (n, pds); capacity: (n,);
+    pd_truth: power.PDTruth with (n*pds,) fields. jit/vmap-safe.
+    """
+    n, npd = lam.shape
+    u_cl = hist_usage[:, -28:].reshape(n, -1)                # (n, t)
+    u_pd = (lam[..., None] * u_cl[:, None, :]).reshape(n * npd, -1)
+    u_norm = u_pd / jnp.clip(
+        capacity[:, None, None].repeat(npd, 1).reshape(n * npd, 1),
+        1e-6, None)
+    p_pd = power.simulate_pd_power(key, pd_truth, u_norm)
+    coef, breaks = power.fit_pd_models(u_norm, p_pd)
+    # materialization point: keeps the fitted model's numerics independent
+    # of how downstream consumers fuse (bitwise batched/sequential parity)
+    coef, breaks = jax.lax.optimization_barrier((coef, breaks))
+
+    cap_pd = capacity[:, None].repeat(npd, 1).reshape(-1)
 
     def cluster_power_fn(u_cluster):                         # (n,) -> (n,)
-        u_pd_now = (state.lam * u_cluster[:, None]).reshape(-1)
+        u_pd_now = (lam * u_cluster[:, None]).reshape(-1)
         u_n = u_pd_now / jnp.clip(cap_pd, 1e-6, None)
         p = jax.vmap(power.pd_power)(coef, breaks, u_n[:, None])[:, 0]
         return p.reshape(n, npd).sum(axis=1)
 
     def cluster_slope_fn(u_cluster):
-        u_pd_now = (state.lam * u_cluster[:, None]).reshape(-1)
+        u_pd_now = (lam * u_cluster[:, None]).reshape(-1)
         u_n = u_pd_now / jnp.clip(cap_pd, 1e-6, None)
         s = jax.vmap(power.pd_slope)(coef, breaks, u_n[:, None])[:, 0]
         s = s / jnp.clip(cap_pd, 1e-6, None)       # d kW / d cluster-CPU
-        return (s.reshape(n, npd) * state.lam).sum(axis=1)
+        return (s.reshape(n, npd) * lam).sum(axis=1)
 
     return cluster_power_fn, cluster_slope_fn, (coef, breaks)
 
 
-def day_forecasts(state: FleetState):
-    """Run the forecasting pipeline for the next day (vmapped)."""
-    dow = jnp.asarray(state.day % 7)
+def make_power_fn(state: FleetState):
+    """Cluster power from PD piecewise models fit on recent history."""
+    return power_model_from_history(state.hist_usage, state.lam,
+                                    state.truth["capacity"], state.pd_truth,
+                                    jax.random.PRNGKey(state.day))
+
+
+def day_forecasts_arrays(hist_uif, hist_flex_daily, hist_res_daily,
+                         hist_usage, hist_res, hist_tr_pred, hist_uif_pred,
+                         day, gamma):
+    """Pure core of day_forecasts: next-day forecasting pipeline from
+    rolling history arrays. All (n, hist[, 24]); day/gamma may be traced."""
+    n = hist_uif.shape[0]
+    dow = jnp.asarray(day % 7)
     uif_pred = jax.vmap(lambda h: forecast.forecast_inflexible(h, dow))(
-        state.hist_uif)
+        hist_uif)
     tuf_pred = jax.vmap(lambda d: forecast.forecast_daily_total(d, dow))(
-        state.hist_flex_daily)
+        hist_flex_daily)
     tr_pred = jax.vmap(lambda d: forecast.forecast_daily_total(d, dow))(
-        state.hist_res_daily)
+        hist_res_daily)
     ra, rb = jax.vmap(forecast.fit_ratio_model)(
-        state.hist_usage[:, -28:].reshape(state.cfg.n_clusters, -1),
-        state.hist_res[:, -28:].reshape(state.cfg.n_clusters, -1))
+        hist_usage[:, -28:].reshape(n, -1),
+        hist_res[:, -28:].reshape(n, -1))
     eps97 = jax.vmap(lambda p, a: forecast.relative_error_quantile(
-        p[-90:], a[-90:], 0.97))(state.hist_tr_pred, state.hist_res_daily)
+        p[-90:], a[-90:], 0.97))(hist_tr_pred, hist_res_daily)
     theta = forecast.theta_requirement(tr_pred, eps97)
     alpha = jax.vmap(forecast.alpha_inflation)(theta, uif_pred, tuf_pred,
                                                ra, rb)
     # (1-gamma) hourly inflexible quantile from trailing prediction errors
     epsq = jax.vmap(lambda p, a: forecast.relative_error_quantile(
-        p[-28:].reshape(-1), a[-28:].reshape(-1), 1 - state.cfg.gamma))(
-        state.hist_uif_pred, state.hist_uif)
+        p[-28:].reshape(-1), a[-28:].reshape(-1), 1 - gamma))(
+        hist_uif_pred, hist_uif)
     uif_q = uif_pred * (1.0 + jnp.clip(epsq, 0.0, 1.0)[:, None])
     return {"uif": uif_pred, "tuf": tuf_pred, "tr": tr_pred,
             "ratio_a": ra, "ratio_b": rb, "theta": theta, "alpha": alpha,
             "uif_q": uif_q}
+
+
+def day_forecasts(state: FleetState):
+    """Run the forecasting pipeline for the next day (vmapped)."""
+    return day_forecasts_arrays(
+        state.hist_uif, state.hist_flex_daily, state.hist_res_daily,
+        state.hist_usage, state.hist_res, state.hist_tr_pred,
+        state.hist_uif_pred, state.day, state.cfg.gamma)
 
 
 def carbon_forecast_next(state: FleetState, day: int):
@@ -265,10 +292,13 @@ def carbon_forecast_next(state: FleetState, day: int):
     return actual_z, fc_z, actual_z[zmap], fc_z[zmap]
 
 
-def build_problem(state: FleetState, fc, eta_fc, power_fn, slope_fn
-                  ) -> vcc.VCCProblem:
+def build_problem_arrays(fc, eta_fc, power_fn, slope_fn, queue, u_pow_cap,
+                         capacity, campus, campus_limit, lambda_e, lambda_p
+                         ) -> vcc.VCCProblem:
+    """Pure core of build_problem: assemble the fleetwide VCC problem from
+    forecast dict + carbon forecast + structural arrays."""
     # risk-aware daily flexible budget (eq. 3) + carried-over queue
-    tau = fc["alpha"] * fc["tuf"] + state.queue
+    tau = fc["alpha"] * fc["tuf"] + queue
     u_nom = fc["uif"] + tau[:, None] / 24.0
     pow_nom = jax.vmap(power_fn, in_axes=1, out_axes=1)(u_nom)
     pi = jax.vmap(slope_fn, in_axes=1, out_axes=1)(u_nom)
@@ -276,10 +306,17 @@ def build_problem(state: FleetState, fc, eta_fc, power_fn, slope_fn
                               u_nom)
     return vcc.VCCProblem(
         eta=eta_fc, u_if=fc["uif"], u_if_q=fc["uif_q"], tau=tau,
-        pow_nom=pow_nom, pi=pi, u_pow_cap=state.u_pow_cap,
-        capacity=state.capacity, ratio=ratio, campus=state.campus,
-        campus_limit=state.campus_limit, lambda_e=state.cfg.lambda_e,
-        lambda_p=state.cfg.lambda_p)
+        pow_nom=pow_nom, pi=pi, u_pow_cap=u_pow_cap,
+        capacity=capacity, ratio=ratio, campus=campus,
+        campus_limit=campus_limit, lambda_e=lambda_e, lambda_p=lambda_p)
+
+
+def build_problem(state: FleetState, fc, eta_fc, power_fn, slope_fn
+                  ) -> vcc.VCCProblem:
+    return build_problem_arrays(fc, eta_fc, power_fn, slope_fn, state.queue,
+                                state.u_pow_cap, state.capacity,
+                                state.campus, state.campus_limit,
+                                state.cfg.lambda_e, state.cfg.lambda_p)
 
 
 def _observe_day(state: FleetState, day: int, shaped: bool,

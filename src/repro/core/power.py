@@ -44,6 +44,39 @@ def _basis(u: jnp.ndarray, breaks: jnp.ndarray) -> jnp.ndarray:
     return jnp.stack(cols, axis=-1)          # (t, K+2)
 
 
+def _solve_spd(A: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Unrolled Cholesky solve for a small SPD system (K+2 = 5 here).
+
+    Scalar elementwise ops in a fixed order — unlike LAPACK ``solve`` (and
+    matmul normal equations), the result is bitwise identical under vmap,
+    which the sim engine's batched-vs-sequential parity guarantee needs.
+    """
+    n = A.shape[-1]
+    L = [[None] * n for _ in range(n)]
+    for i in range(n):
+        for j in range(i + 1):
+            s = A[..., i, j]
+            for k in range(j):
+                s = s - L[i][k] * L[j][k]
+            if i == j:
+                L[i][j] = jnp.sqrt(jnp.clip(s, 1e-12, None))
+            else:
+                L[i][j] = s / L[j][j]
+    y = []
+    for i in range(n):
+        s = b[..., i]
+        for k in range(i):
+            s = s - L[i][k] * y[k]
+        y.append(s / L[i][i])
+    x = [None] * n
+    for i in reversed(range(n)):
+        s = y[i]
+        for k in range(i + 1, n):
+            s = s - L[k][i] * x[k]
+        x[i] = s / L[i][i]
+    return jnp.stack(x, axis=-1)
+
+
 def fit_pd_model(cpu: jnp.ndarray, power: jnp.ndarray
                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Least-squares piecewise-linear fit for ONE pd.
@@ -51,9 +84,16 @@ def fit_pd_model(cpu: jnp.ndarray, power: jnp.ndarray
     qs = jnp.linspace(0.0, 1.0, N_BREAKS + 2)[1:-1]
     breaks = jnp.quantile(cpu, qs)
     X = _basis(cpu, breaks)
-    # ridge-regularized normal equations (stable under short windows)
-    XtX = X.T @ X + 1e-4 * jnp.eye(X.shape[1])
-    coef = jnp.linalg.solve(XtX, X.T @ power)
+    # ridge-regularized normal equations (stable under short windows),
+    # assembled as reduce-of-multiply rather than dots: XLA dots pick
+    # batch-extent-dependent accumulation orders, plain reduces have held
+    # batch-invariant here (and fleet.power_model_from_history pins the
+    # result behind an optimization_barrier; the sim parity tests would
+    # catch a backend that reassociates these)
+    XtX = jnp.sum(X[..., :, None] * X[..., None, :], axis=-3) \
+        + 1e-4 * jnp.eye(X.shape[-1])
+    Xty = jnp.sum(X * power[..., None], axis=-2)
+    coef = _solve_spd(XtX, Xty)
     return coef, breaks
 
 
@@ -61,10 +101,15 @@ fit_pd_models = jax.jit(jax.vmap(fit_pd_model))      # (pds, t) -> batched
 
 
 def pd_power(coef, breaks, u):
-    """Predicted power at usage u (broadcasts over u)."""
-    shp = u.shape
-    X = _basis(u.reshape(-1), breaks)
-    return (X @ coef).reshape(shp)
+    """Predicted power at usage u (broadcasts over u).
+
+    Evaluated as an ordered elementwise chain, not `basis @ coef`: a dot's
+    accumulation order varies with surrounding batch dims, and the sim
+    engine requires bitwise batched-vs-sequential parity."""
+    p = coef[0] + coef[1] * u
+    for k in range(breaks.shape[0]):
+        p = p + coef[2 + k] * jnp.maximum(u - breaks[k], 0.0)
+    return p
 
 
 def pd_slope(coef, breaks, u):

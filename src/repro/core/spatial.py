@@ -49,3 +49,14 @@ def spatial_shift(p: VCCProblem, *, mobility: float = 0.3,
 
     shift = jax.lax.fori_loop(0, iters, body, jnp.zeros_like(tau))
     return jnp.clip(tau + shift, 0.0, None), price
+
+
+def spatial_shift_batched(p: VCCProblem, *, mobility=0.3, iters: int = 200,
+                          lr: float = 0.1):
+    """vmap spatial_shift over a leading batch axis of a stacked VCCProblem.
+    ``mobility`` may be a scalar or a (batch,) array (scenario sweeps)."""
+    mob = jnp.asarray(mobility, f32)
+    if mob.ndim == 0:
+        mob = jnp.broadcast_to(mob, (jax.tree_util.tree_leaves(p)[0].shape[0],))
+    return jax.vmap(lambda q, m: spatial_shift(q, mobility=m, iters=iters,
+                                               lr=lr))(p, mob)

@@ -54,6 +54,17 @@ class VCCProblem:
     drop_limit: float = 0.8
 
 
+# Pytree registration: every field except the static drop_limit is data, so
+# stacked problems can cross vmap/scan boundaries (sim engine, sweeps).
+# lambda_e / lambda_p are data leaves — scenario sweeps batch them.
+jax.tree_util.register_dataclass(
+    VCCProblem,
+    data_fields=["eta", "u_if", "u_if_q", "tau", "pow_nom", "pi",
+                 "u_pow_cap", "capacity", "ratio", "campus", "campus_limit",
+                 "lambda_e", "lambda_p"],
+    meta_fields=["drop_limit"])
+
+
 @dataclass
 class VCCSolution:
     delta: jnp.ndarray        # (n, H)
@@ -62,6 +73,12 @@ class VCCSolution:
     shaped: jnp.ndarray       # (n,) bool: cluster actively shaped
     mu: jnp.ndarray           # (n_dc,) campus duals
     objective: jnp.ndarray    # scalar
+
+
+jax.tree_util.register_dataclass(
+    VCCSolution,
+    data_fields=["delta", "y", "vcc", "shaped", "mu", "objective"],
+    meta_fields=[])
 
 
 def delta_bounds(p: VCCProblem):
@@ -185,6 +202,12 @@ def solve_vcc(p: VCCProblem, *, inner_iters: int = 80, outer_iters: int = 20,
                     p.capacity[:, None])
     return VCCSolution(delta=delta, y=y, vcc=vcc, shaped=feasible, mu=mu,
                        objective=objective(p, delta, mu))
+
+
+def solve_vcc_batched(p: VCCProblem, **kw) -> VCCSolution:
+    """vmap solve_vcc over a leading (scenario x seed) axis of a stacked
+    VCCProblem (requires the pytree registration above)."""
+    return jax.vmap(lambda q: solve_vcc(q, **kw))(p)
 
 
 # ------------------------------------------------- exact greedy reference

@@ -146,21 +146,32 @@ def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
 
 
 def _resolve_shape(comp: Computation, operand: str) -> Optional[str]:
-    operand = operand.strip().lstrip("%")
+    operand = operand.strip()
+    if "%" in operand and not operand.startswith("%"):
+        # inline-typed operand ('f32[2,3]{1,0} %name'): the type is right
+        # there — newer XLA prints operand types in the instruction line.
+        tpart = operand.rsplit("%", 1)[0].strip()
+        if _ARRAY_RE.search(tpart):
+            return tpart
+        operand = "%" + operand.rsplit("%", 1)[1]
+    operand = operand.lstrip("%").strip()
     if operand in comp.symbols:
         return comp.symbols[operand]
     return comp.params.get(operand)
 
 
 def _operands(args: str) -> List[str]:
+    """Split the operand list of 'op(...)'. Operands may be bare names
+    ('%x') or inline-typed ('f32[2,3]{1,0} %x'); commas inside (), [] and
+    {} never split."""
     names = []
     depth = 0
     cur = []
     for ch in args:
-        if ch == "(":
+        if ch in "([{":
             depth += 1
-        elif ch == ")":
-            if depth == 0:
+        elif ch in ")]}":
+            if ch == ")" and depth == 0:
                 break
             depth -= 1
         if ch == "," and depth == 0:
@@ -170,7 +181,7 @@ def _operands(args: str) -> List[str]:
             cur.append(ch)
     if cur:
         names.append("".join(cur).strip())
-    return [n for n in names if n.startswith("%")]
+    return [n for n in names if "%" in n]
 
 
 def _trip_count(comps: Dict[str, Computation], cond_name: str,

@@ -7,6 +7,20 @@ import numpy as np
 import jax
 
 
+def use_mesh(mesh):
+    """Ambient-mesh context manager across JAX versions.
+
+    ``jax.set_mesh`` landed well after 0.4.x; on older releases the Mesh
+    object itself is the context manager that installs the ambient mesh
+    (needed for bare-PartitionSpec sharding constraints in act.py).
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """TPU v5e production mesh: 16x16 (256 chips) per pod; 2 pods = 512.
 

@@ -227,12 +227,16 @@ def _mla_flash_decode(mesh, q_eff, q_rope, ckv_new, krope_new, ckv_c,
         ctx = gctx / jnp.maximum(gl, 1e-30).transpose(0, 2, 1)[..., None]
         return ctx, ckv_c, krope_c
 
-    return jax.shard_map(
-        shard_fn, mesh=mesh,
-        in_specs=(P(ba, None, None, None), P(ba, None, None, None),
-                  P(ba, None, None), P(ba, None, None),
-                  P(ba, "model", None), P(ba, "model", None), P()),
-        out_specs=(P(ba, None, None, None), P(ba, "model", None),
-                   P(ba, "model", None)),
-        check_vma=False,
-    )(q_eff, q_rope, ckv_new, krope_new, ckv_c, krope_c, pos)
+    in_specs = (P(ba, None, None, None), P(ba, None, None, None),
+                P(ba, None, None), P(ba, None, None),
+                P(ba, "model", None), P(ba, "model", None), P())
+    out_specs = (P(ba, None, None, None), P(ba, "model", None),
+                 P(ba, "model", None))
+    if hasattr(jax, "shard_map"):
+        mapped = jax.shard_map(shard_fn, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, check_vma=False)
+    else:  # jax<=0.4: experimental API, replication check flag spelled
+        from jax.experimental.shard_map import shard_map
+        mapped = shard_map(shard_fn, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_rep=False)
+    return mapped(q_eff, q_rope, ckv_new, krope_new, ckv_c, krope_c, pos)

@@ -1,0 +1,101 @@
+"""Emissions ledger (codecarbon/RackMind-inspired) for batched rollouts.
+
+Accumulates per-cluster cumulative kgCO2e, kWh, peak power, delayed
+CPU-hours and flexible-work completion for the shaped run AND the unshaped
+counterfactual that the engine advances in the same batch. A Ledger is a
+flat pytree of arrays, so it rides in the `lax.scan` carry and vmaps across
+the (scenario x seed) axis for free.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+class DayMetrics(NamedTuple):
+    """Per-cluster reductions of one simulated day (all (n,))."""
+    carbon_kg: jnp.ndarray        # sum_h power * intensity
+    kwh: jnp.ndarray              # sum_h power (kW over 1h ticks)
+    peak_kw: jnp.ndarray          # max_h power
+    served: jnp.ndarray           # flexible CPU-h served
+    arrived: jnp.ndarray          # flexible CPU-h arrived
+    unmet: jnp.ndarray            # SLO-relevant backlog growth
+    queue_end: jnp.ndarray        # flexible CPU-h carried overnight
+    cf_carbon_kg: jnp.ndarray     # unshaped counterfactual, same day
+    cf_kwh: jnp.ndarray
+    cf_peak_kw: jnp.ndarray
+    cf_served: jnp.ndarray
+    cf_queue_end: jnp.ndarray
+
+
+class Ledger(NamedTuple):
+    """Cumulative per-cluster totals over a rollout (all (n,) but days)."""
+    days: jnp.ndarray             # () f32 day counter
+    carbon_kg: jnp.ndarray
+    kwh: jnp.ndarray
+    peak_kw: jnp.ndarray          # running max over days
+    served: jnp.ndarray
+    arrived: jnp.ndarray
+    unmet: jnp.ndarray
+    delayed_cpu_h: jnp.ndarray    # sum of nightly carried queue
+    cf_carbon_kg: jnp.ndarray
+    cf_kwh: jnp.ndarray
+    cf_peak_kw: jnp.ndarray
+    cf_served: jnp.ndarray
+    cf_delayed_cpu_h: jnp.ndarray
+
+
+def init_ledger(n_clusters: int) -> Ledger:
+    z = jnp.zeros((n_clusters,), f32)
+    return Ledger(days=jnp.zeros((), f32), carbon_kg=z, kwh=z, peak_kw=z,
+                  served=z, arrived=z, unmet=z, delayed_cpu_h=z,
+                  cf_carbon_kg=z, cf_kwh=z, cf_peak_kw=z, cf_served=z,
+                  cf_delayed_cpu_h=z)
+
+
+def ledger_update(led: Ledger, m: DayMetrics) -> Ledger:
+    return Ledger(
+        days=led.days + 1.0,
+        carbon_kg=led.carbon_kg + m.carbon_kg,
+        kwh=led.kwh + m.kwh,
+        peak_kw=jnp.maximum(led.peak_kw, m.peak_kw),
+        served=led.served + m.served,
+        arrived=led.arrived + m.arrived,
+        unmet=led.unmet + m.unmet,
+        delayed_cpu_h=led.delayed_cpu_h + m.queue_end,
+        cf_carbon_kg=led.cf_carbon_kg + m.cf_carbon_kg,
+        cf_kwh=led.cf_kwh + m.cf_kwh,
+        cf_peak_kw=jnp.maximum(led.cf_peak_kw, m.cf_peak_kw),
+        cf_served=led.cf_served + m.cf_served,
+        cf_delayed_cpu_h=led.cf_delayed_cpu_h + m.cf_queue_end,
+    )
+
+
+def summarize(led: Ledger) -> Dict[str, jnp.ndarray]:
+    """Fleet-level scalars for one rollout; vmap for batched ledgers."""
+    carbon = led.carbon_kg.sum()
+    cf_carbon = jnp.clip(led.cf_carbon_kg.sum(), 1e-9, None)
+    kwh = led.kwh.sum()
+    cf_kwh = jnp.clip(led.cf_kwh.sum(), 1e-9, None)
+    peak = led.peak_kw.sum()                 # sum of per-cluster peaks
+    cf_peak = jnp.clip(led.cf_peak_kw.sum(), 1e-9, None)
+    arrived = jnp.clip(led.arrived.sum(), 1e-9, None)
+    return {
+        "carbon_kg": carbon,
+        "cf_carbon_kg": cf_carbon,
+        "carbon_saved_pct": 100.0 * (cf_carbon - carbon) / cf_carbon,
+        "kwh": kwh,
+        "kwh_saved_pct": 100.0 * (cf_kwh - kwh) / cf_kwh,
+        "peak_kw": peak,
+        "peak_reduction_pct": 100.0 * (cf_peak - peak) / cf_peak,
+        "flex_within_24h_pct": 100.0 * (1.0 - jnp.clip(
+            led.unmet.sum() / arrived, 0.0, 1.0)),
+        "flex_completion_pct": 100.0 * jnp.clip(
+            led.served.sum() / arrived, 0.0, None),
+        "delayed_cpu_h_per_day": led.delayed_cpu_h.sum()
+        / jnp.clip(led.days, 1.0, None),
+        "mean_intensity_kg_per_kwh": carbon / jnp.clip(kwh, 1e-9, None),
+    }

@@ -1,0 +1,56 @@
+"""Reduce batched rollouts into per-scenario summary tables.
+
+Consumed by benchmarks (BENCH_sim.json rows) and examples/scenario_sweep.py.
+Input: a batched Ledger whose leading axis is scenario-major x seed-minor
+(the layout produced by scenarios.build_batch).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+import numpy as np
+
+from repro.sim.ledger import Ledger, summarize
+
+COLUMNS = ("carbon_saved_pct", "peak_reduction_pct", "flex_within_24h_pct",
+           "kwh_saved_pct", "delayed_cpu_h_per_day")
+
+
+def scenario_rows(ledgers: Ledger, scenario_names: Sequence[str],
+                  n_seeds: int) -> List[Dict[str, float]]:
+    """Per-scenario mean +/- std (over seeds) of the ledger summaries."""
+    summaries = jax.vmap(summarize)(ledgers)        # dict of (B,)
+    rows = []
+    for i, name in enumerate(scenario_names):
+        sl = slice(i * n_seeds, (i + 1) * n_seeds)
+        row: Dict[str, float] = {"scenario": name, "n_seeds": n_seeds}
+        for k, v in summaries.items():
+            vals = np.asarray(v[sl], dtype=np.float64)
+            row[k] = float(vals.mean())
+            row[k + "_std"] = float(vals.std())
+        rows.append(row)
+    return rows
+
+
+def format_table(rows: List[Dict[str, float]],
+                 columns: Sequence[str] = COLUMNS) -> str:
+    """Fixed-width ASCII table: one line per scenario."""
+    name_w = max([len("scenario")] + [len(r["scenario"]) for r in rows]) + 2
+    headers = {"carbon_saved_pct": "carbonSaved%",
+               "peak_reduction_pct": "peakRed%",
+               "flex_within_24h_pct": "flex<24h%",
+               "kwh_saved_pct": "kwhSaved%",
+               "delayed_cpu_h_per_day": "delayedCPUh/d"}
+    cols = [headers.get(c, c) for c in columns]
+    widths = [max(len(c), 12) for c in cols]
+    out = ["scenario".ljust(name_w)
+           + "  ".join(c.rjust(w) for c, w in zip(cols, widths))]
+    out.append("-" * (name_w + sum(widths) + 2 * (len(cols) - 1)))
+    for r in rows:
+        cells = []
+        for c, w in zip(columns, widths):
+            std = r.get(c + "_std", 0.0)
+            cells.append(f"{r[c]:+.2f}±{std:.2f}".rjust(w))
+        out.append(r["scenario"].ljust(name_w) + "  ".join(cells))
+    return "\n".join(out)

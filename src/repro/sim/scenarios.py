@@ -1,0 +1,228 @@
+"""Declarative scenario perturbations composable onto the synthetic fleet.
+
+A Scenario = a name + scalar overrides (carbon price, risk, mobility) + a
+tuple of Perturbation objects, each of which edits the multiplier
+*schedules* (numpy arrays, one row per rollout day) that the engine
+consumes. Composition is pure: `build_params(cfg, scenario, seed, days)`
+always returns the identical SimParams pytree for identical inputs —
+per-scenario randomness (e.g. which clusters an outage hits) is drawn from
+a generator keyed on (seed, crc32(scenario.name)).
+
+Scenario axes follow the related literature: renewable droughts and grid
+mix shifts ("Let's Wait Awhile"), price/risk sweeps ("The War of the
+Efficiencies"), plus operational events (outages, campus derates, demand
+surges) from the paper's production narrative.
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import carbon, fleet
+from repro.sim.engine import SimConfig, SimParams
+
+f32 = jnp.float32
+
+
+# ------------------------------------------------------------ perturbations
+
+@dataclass(frozen=True)
+class Perturbation:
+    """Base: edits the schedule dict in place. start/length in rollout
+    days; length < 0 means 'until the end of the horizon'."""
+    start: int = 0
+    length: int = -1
+
+    def window(self, days: int) -> slice:
+        end = days if self.length < 0 else min(self.start + self.length,
+                                               days)
+        return slice(min(self.start, days), end)
+
+    def apply(self, sched: Dict[str, np.ndarray], rng: np.random.Generator,
+              cfg: SimConfig) -> None:
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class RenewableDrought(Perturbation):
+    """Dunkelflaute: solar+wind capacity drops by `depth` in some zones."""
+    depth: float = 0.7
+    zones: Optional[Tuple[int, ...]] = None      # None = all zones
+
+    def apply(self, sched, rng, cfg):
+        w = self.window(sched["green_scale"].shape[0])
+        zs = list(self.zones) if self.zones is not None \
+            else list(range(cfg.n_zones))
+        sched["green_scale"][w, zs] *= (1.0 - self.depth)
+
+
+@dataclass(frozen=True)
+class CoalRetirement(Perturbation):
+    """Linear ramp-down of the thermal coal share, `rate` per week."""
+    rate_per_week: float = 0.05
+
+    def apply(self, sched, rng, cfg):
+        days = sched["coal_scale"].shape[0]
+        w = self.window(days)
+        t = np.arange(w.stop - w.start, dtype=np.float64)
+        ramp = np.clip(1.0 - self.rate_per_week * t / 7.0, 0.0, None)
+        sched["coal_scale"][w] *= ramp[:, None]
+
+
+@dataclass(frozen=True)
+class ClusterOutage(Perturbation):
+    """A fraction of clusters loses most capacity for a window."""
+    frac: float = 0.25
+    derate: float = 0.1          # remaining capacity fraction
+
+    def apply(self, sched, rng, cfg):
+        w = self.window(sched["cap_scale"].shape[0])
+        k = max(1, int(round(self.frac * cfg.n_clusters)))
+        hit = np.sort(rng.choice(cfg.n_clusters, size=k, replace=False))
+        sched["cap_scale"][w, hit] *= self.derate
+
+
+@dataclass(frozen=True)
+class CampusDerate(Perturbation):
+    """Contracted campus power limit drops (grid event / demand response)."""
+    scale: float = 0.85
+    campuses: Optional[Tuple[int, ...]] = None
+
+    def apply(self, sched, rng, cfg):
+        w = self.window(sched["campus_scale"].shape[0])
+        cs = list(self.campuses) if self.campuses is not None \
+            else list(range(cfg.n_campuses))
+        sched["campus_scale"][w, cs] *= self.scale
+
+
+@dataclass(frozen=True)
+class DemandSurge(Perturbation):
+    """Flexible-demand arrivals scale up fleetwide for a window."""
+    scale: float = 1.5
+
+    def apply(self, sched, rng, cfg):
+        w = self.window(sched["arrival_scale"].shape[0])
+        sched["arrival_scale"][w] *= self.scale
+
+
+# ----------------------------------------------------------------- scenario
+
+@dataclass(frozen=True)
+class Scenario:
+    name: str
+    description: str = ""
+    perturbations: Tuple[Perturbation, ...] = ()
+    lambda_e: float = 0.5        # carbon price (paper-style sweep axis)
+    lambda_p: float = 0.05
+    gamma: float = 0.05          # power-capping violation probability
+    mobility: float = 0.0        # spatial-shift mobility (0 = paper mode)
+
+
+def _scenario_rng(scenario: Scenario, seed: int) -> np.random.Generator:
+    tag = zlib.crc32(scenario.name.encode("utf-8"))
+    return np.random.default_rng((int(seed) << 32) ^ tag)
+
+
+def build_params(cfg: SimConfig, scenario: Scenario, seed: int, days: int
+                 ) -> SimParams:
+    """Compose a scenario onto the synthetic fleet -> array-only SimParams.
+
+    Pure: identical (cfg, scenario, seed, days) -> identical arrays.
+    """
+    n, m, z, npds = (cfg.n_clusters, cfg.n_campuses, cfg.n_zones,
+                     cfg.pds_per_cluster)
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 8)
+    truth = fleet.cluster_truth(ks[0], n)
+    npd = n * npds
+    pd_idle = 60.0 + 40.0 * jax.random.uniform(ks[1], (npd,))
+    pd_slope = 250.0 + 150.0 * jax.random.uniform(ks[2], (npd,))
+    pd_curve = 0.8 + 0.5 * jax.random.uniform(ks[3], (npd,))
+    lam = jax.nn.softmax(jax.random.normal(ks[4], (n, npds)), axis=1)
+    zone = carbon.stack_zone_params(carbon.default_zones(z))
+
+    sched = {
+        "green_scale": np.ones((days, z)),
+        "coal_scale": np.ones((days, z)),
+        "cap_scale": np.ones((days, n)),
+        "arrival_scale": np.ones((days, n)),
+        "campus_scale": np.ones((days, m)),
+    }
+    rng = _scenario_rng(scenario, seed)
+    for p in scenario.perturbations:
+        p.apply(sched, rng, cfg)
+
+    return SimParams(
+        key=jax.random.fold_in(key, 17),
+        truth=truth, pd_idle=pd_idle, pd_slope=pd_slope, pd_curve=pd_curve,
+        lam=lam, zone=zone,
+        lambda_e=jnp.asarray(scenario.lambda_e, f32),
+        lambda_p=jnp.asarray(scenario.lambda_p, f32),
+        gamma=jnp.asarray(scenario.gamma, f32),
+        mobility=jnp.asarray(scenario.mobility, f32),
+        green_scale=jnp.asarray(sched["green_scale"], f32),
+        coal_scale=jnp.asarray(sched["coal_scale"], f32),
+        cap_scale=jnp.asarray(sched["cap_scale"], f32),
+        arrival_scale=jnp.asarray(sched["arrival_scale"], f32),
+        campus_scale=jnp.asarray(sched["campus_scale"], f32),
+    )
+
+
+def build_batch(cfg: SimConfig, scenarios: Sequence[Scenario],
+                seeds: Sequence[int], days: int) -> SimParams:
+    """Stack (scenario x seed) SimParams along a new leading axis, scenario
+    major: batch index b = i_scenario * len(seeds) + i_seed."""
+    all_params = [build_params(cfg, sc, seed, days)
+                  for sc in scenarios for seed in seeds]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *all_params)
+
+
+# ------------------------------------------------------------------ library
+
+def default_library(days: int = 14) -> List[Scenario]:
+    """The standing scenario sweep (>= 8 scenarios)."""
+    half = max(days // 2, 1)
+    return [
+        Scenario("baseline",
+                 "nominal grid, nominal fleet"),
+        Scenario("renewable_drought",
+                 "70% solar+wind drop across all zones, second half",
+                 (RenewableDrought(start=half, depth=0.7),)),
+        Scenario("coal_retirement",
+                 "coal share ramps down 10%/week from day 0",
+                 (CoalRetirement(rate_per_week=0.10),)),
+        Scenario("cluster_outage",
+                 "25% of clusters derated to 10% capacity mid-horizon",
+                 (ClusterOutage(start=half, length=max(days // 4, 1),
+                                frac=0.25),)),
+        Scenario("campus_derate",
+                 "all campus power contracts cut 15%",
+                 (CampusDerate(scale=0.85),)),
+        Scenario("demand_surge",
+                 "flexible arrivals x1.6 in the second half",
+                 (DemandSurge(start=half, scale=1.6),)),
+        Scenario("high_carbon_price",
+                 "lambda_e x4: aggressive shaping",
+                 lambda_e=2.0),
+        Scenario("low_risk_tolerance",
+                 "gamma 0.01: conservative power capping",
+                 gamma=0.01),
+        Scenario("spatial_mobility",
+                 "30% of flexible work location-flexible (beyond-paper)",
+                 mobility=0.3),
+        Scenario("peak_shaver",
+                 "peak-power-optimal pricing (lambda_p >> lambda_e): the "
+                 "'War of the Efficiencies' counterpoint",
+                 lambda_e=0.02, lambda_p=0.5),
+        Scenario("perfect_storm",
+                 "drought + outage + surge, compounded",
+                 (RenewableDrought(start=half, depth=0.6),
+                  ClusterOutage(start=half, length=max(days // 4, 1),
+                                frac=0.2),
+                  DemandSurge(start=half, scale=1.4))),
+    ]

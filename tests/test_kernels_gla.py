@@ -62,7 +62,8 @@ def test_chunk_size_invariance():
     outs = [gla_chunked(q, k, v, ld, bonus=u, strict=strict, chunk=c)[0]
             for c in (8, 16, 32, 96)]
     for o in outs[1:]:
-        assert float(jnp.abs(o - outs[0]).max()) < 5e-5
+        # fp32 accumulation-order tolerance (matches test_chunked_vs_naive)
+        assert float(jnp.abs(o - outs[0]).max()) < 2e-4
 
 
 def test_step_matches_sequence():

