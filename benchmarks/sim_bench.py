@@ -1,28 +1,45 @@
 """Scenario-sweep benchmark: batched engine vs legacy Python day loop.
 
 Emits BENCH_sim.json (repo root) with rollout throughput in fleet-days/sec
-for the vmap-batched engine and the legacy per-day Python loop in
-core/fleet.py, plus the per-scenario summary rows. Registered in run.py.
+for the vmap-batched engine, the device-sharded batched engine
+(`rollout_batch_sharded`), and the legacy per-day Python loop in
+core/fleet.py, plus a legacy-vs-engine drift probe (both paths run the
+same staged day step, so drift must be ~0) and the per-scenario summary
+rows. Registered in run.py; also a CLI:
+
+    PYTHONPATH=src python -m benchmarks.sim_bench [--quick] [--out PATH]
+
+``--quick`` runs a small CI smoke configuration and FAILS (exit 1) if the
+batched engine loses its throughput edge over the legacy loop or if the
+legacy and engine paths drift apart — the regression tripwire the CI
+workflow runs on every push.
 """
 from __future__ import annotations
 
+import argparse
 import json
+import sys
 import time
 from pathlib import Path
 
 import jax
+import numpy as np
 
 from repro.core import fleet as F
-from repro.sim import (SimConfig, build_batch, default_library,
-                       rollout_batch, scenario_rows)
+from repro.sim import (SimConfig, Scenario, build_batch, build_params,
+                       default_library, make_day_step, make_init,
+                       rollout_batch, rollout_batch_sharded, scenario_rows)
+from repro.sim.engine import _day_xs
 
 BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_sim.json"
 
 
-def _legacy_days_per_sec(n_clusters=8, days=3, seed=1):
-    """Legacy path: mutable FleetState stepped by a Python day loop."""
+def _legacy_days_per_sec(n_clusters=8, days=3, seed=1, hist_days=None):
+    """Legacy path: mutable FleetState stepped by a Python day loop (now
+    one jitted staged step per day — the old eager loop is gone)."""
+    kw = {} if hist_days is None else {"hist_days": hist_days}
     cfg = F.FleetConfig(n_clusters=n_clusters, n_campuses=4, n_zones=4,
-                        lambda_e=0.5, seed=seed)
+                        lambda_e=0.5, seed=seed, **kw)
     st = F.init_fleet(cfg)
     st = F.day_cycle(st)               # warm-up day: amortize jit tracing
     jax.block_until_ready(st.queue)
@@ -35,13 +52,13 @@ def _legacy_days_per_sec(n_clusters=8, days=3, seed=1):
 
 
 def _batched_days_per_sec(n_clusters=8, days=7, n_scen=4, n_seeds=2,
-                          hist_days=28):
+                          hist_days=28, sharded=False):
     cfg = SimConfig(n_clusters=n_clusters, n_campuses=4, n_zones=4,
                     pds_per_cluster=2, hist_days=hist_days)
     scens = default_library(days)[:n_scen]
     seeds = list(range(n_seeds))
     batch = build_batch(cfg, scens, seeds, days)
-    run = rollout_batch(cfg, days)
+    run = (rollout_batch_sharded if sharded else rollout_batch)(cfg, days)
     t0 = time.perf_counter()
     _, led, _ = run(batch)
     jax.block_until_ready(led)
@@ -55,27 +72,74 @@ def _batched_days_per_sec(n_clusters=8, days=7, n_scen=4, n_seeds=2,
     return fleet_days / wall, wall, compile_wall, fleet_days, rows
 
 
-def run():
-    base_dps, base_wall = _legacy_days_per_sec()
+def _legacy_engine_drift(n_clusters=4, hist_days=14, seed=0):
+    """Max relative drift between one legacy ``fleet.day_cycle`` day and
+    the engine's ``day_step`` from the same burned-in state. Both are
+    adapters over the same staged core, so this must be ~0 (bitwise on a
+    deterministic backend); growth here means the two paths forked."""
+    fcfg = F.FleetConfig(n_clusters=n_clusters, n_campuses=2, n_zones=2,
+                         pds_per_cluster=2, lambda_e=0.5, lambda_p=0.05,
+                         gamma=0.05, seed=seed, hist_days=hist_days)
+    scfg = SimConfig(n_clusters=n_clusters, n_campuses=2, n_zones=2,
+                     pds_per_cluster=2, hist_days=hist_days)
+    sc = Scenario("drift_probe", lambda_e=0.5, lambda_p=0.05, gamma=0.05)
+    p = build_params(scfg, sc, seed=seed, days=1)
+    s = jax.jit(make_init(scfg))(p)
+    s2, out = jax.jit(make_day_step(scfg))(p, s, _day_xs(p, 0))
+    st = F.init_fleet(fcfg)
+    rec = {}
+    st = F.day_cycle(st, rec)
+    drift = 0.0
+    for a, b in ((rec["vcc"], out.vcc_curve),
+                 (st.queue, s2.queue),
+                 (st.hist_usage, s2.hist_usage),
+                 (rec["result"].carbon, out.res.carbon)):
+        a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+        denom = np.maximum(np.abs(a), 1e-9)
+        drift = max(drift, float(np.max(np.abs(a - b) / denom)))
+    return drift
+
+
+def run(quick: bool = False, out_path: Path = None):
+    if quick:
+        legacy_kw = dict(n_clusters=4, days=2, hist_days=14)
+        batch_kw = dict(n_clusters=4, days=4, n_scen=3, n_seeds=2,
+                        hist_days=14)
+    else:
+        legacy_kw, batch_kw = {}, {}
+    base_dps, base_wall = _legacy_days_per_sec(**legacy_kw)
     (bat_dps, bat_wall, compile_wall, fleet_days,
-     rows) = _batched_days_per_sec()
+     rows) = _batched_days_per_sec(**batch_kw)
+    (shard_dps, shard_wall, shard_compile, _,
+     _) = _batched_days_per_sec(sharded=True, **batch_kw)
+    drift = _legacy_engine_drift()
     speedup = bat_dps / base_dps
     rec = {
         "legacy_python_loop_days_per_sec": base_dps,
         "batched_engine_days_per_sec": bat_dps,
+        "sharded_engine_days_per_sec": shard_dps,
+        "n_devices": len(jax.devices()),
         "speedup_days_per_sec": speedup,
+        "legacy_engine_drift_relmax": drift,
         "batched_fleet_days": fleet_days,
         "batched_steady_wall_s": bat_wall,
         "batched_compile_wall_s": compile_wall,
+        "sharded_steady_wall_s": shard_wall,
+        "sharded_compile_wall_s": shard_compile,
         "legacy_wall_s": base_wall,
+        "quick": quick,
         "scenarios": rows,
     }
-    BENCH_PATH.write_text(json.dumps(rec, indent=1))
+    (out_path or BENCH_PATH).write_text(json.dumps(rec, indent=1))
     out = [
-        ("sim_legacy_days_per_sec", base_dps, "Python day loop, 8 clusters"),
+        ("sim_legacy_days_per_sec", base_dps,
+         "Python day loop over the jitted staged step"),
         ("sim_batched_days_per_sec", bat_dps,
          f"{fleet_days} fleet-days vmap'd, steady state"),
+        ("sim_sharded_days_per_sec", shard_dps,
+         f"shard_map over {len(jax.devices())} device(s)"),
         ("sim_batched_speedup", speedup, "target: >= 5x"),
+        ("sim_legacy_engine_drift", drift, "same staged core: ~0 required"),
     ]
     for r in rows:
         out.append((f"sim_{r['scenario']}_carbon_saved_pct",
@@ -83,3 +147,37 @@ def run():
                     f"peakRed={r['peak_reduction_pct']:.2f}% "
                     f"flex24h={r['flex_within_24h_pct']:.2f}%"))
     return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small CI smoke config; exits 1 on throughput "
+                         "regression or legacy/engine drift")
+    ap.add_argument("--out", type=Path, default=None,
+                    help="output json path (default: repo-root "
+                         "BENCH_sim.json)")
+    args = ap.parse_args()
+    rows = run(quick=args.quick, out_path=args.out)
+    by_name = {name: val for name, val, _ in rows}
+    for name, val, derived in rows:
+        print(f"{name},{float(val):.4f},{derived}")
+    if args.quick:
+        failures = []
+        if by_name["sim_batched_speedup"] < 1.5:
+            failures.append(
+                f"batched engine speedup {by_name['sim_batched_speedup']:.2f}x"
+                " < 1.5x over the legacy loop")
+        if by_name["sim_legacy_engine_drift"] > 1e-5:
+            failures.append(
+                f"legacy/engine drift {by_name['sim_legacy_engine_drift']:.2e}"
+                " > 1e-5: the two day-cycle paths forked")
+        if failures:
+            for f in failures:
+                print(f"FAIL: {f}", file=sys.stderr)
+            raise SystemExit(1)
+        print("quick smoke OK")
+
+
+if __name__ == "__main__":
+    main()

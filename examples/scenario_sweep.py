@@ -7,6 +7,12 @@ saved vs. the unshaped counterfactual, peak-power reduction, and
 flexible-work completion within 24h.
 
     PYTHONPATH=src python examples/scenario_sweep.py [--days 14] [--seeds 4]
+                                                     [--sharded]
+
+``--sharded`` runs the same batch through `rollout_batch_sharded`: the
+(scenario x seed) axis is shard_map'd over every local device (bitwise
+identical results — the engine's parity contract — so the table does not
+change, only the wall clock on multi-device hosts).
 
 Reading the table: carbon-priced scenarios trade peak power for carbon
 (negative peakRed% — the 'War of the Efficiencies'); `peak_shaver` flips
@@ -18,7 +24,8 @@ import time
 import jax
 
 from repro.sim import (SimConfig, build_batch, default_library,
-                       format_table, rollout_batch, scenario_rows)
+                       format_table, rollout_batch, rollout_batch_sharded,
+                       scenario_rows)
 
 
 def main():
@@ -27,6 +34,9 @@ def main():
     ap.add_argument("--seeds", type=int, default=4)
     ap.add_argument("--clusters", type=int, default=8)
     ap.add_argument("--hist", type=int, default=28)
+    ap.add_argument("--sharded", action="store_true",
+                    help="shard the (scenario x seed) batch over all "
+                         "local devices (bitwise-identical results)")
     args = ap.parse_args()
     if args.days < 1 or args.seeds < 1:
         ap.error("--days and --seeds must be >= 1")
@@ -35,12 +45,15 @@ def main():
                     pds_per_cluster=2, hist_days=args.hist)
     scenarios = default_library(args.days)
     seeds = list(range(args.seeds))
+    mode = (f"shard_map'd over {len(jax.devices())} device(s)"
+            if args.sharded else "one vmap'd batch")
     print(f"{len(scenarios)} scenarios x {len(seeds)} seeds x "
           f"{args.days} days ({cfg.n_clusters} clusters, "
-          f"{cfg.hist_days}-day burn-in) in one vmap'd batch...")
+          f"{cfg.hist_days}-day burn-in) in {mode}...")
 
     batch = build_batch(cfg, scenarios, seeds, args.days)
-    run = rollout_batch(cfg, args.days)
+    run = (rollout_batch_sharded if args.sharded
+           else rollout_batch)(cfg, args.days)
     t0 = time.time()
     _, ledgers, _ = run(batch)
     jax.block_until_ready(ledgers)

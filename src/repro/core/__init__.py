@@ -3,11 +3,13 @@
 Pipelines (paper Fig. 4): carbon fetching (carbon.py), power models
 (power.py), load forecasting (forecast.py), risk-aware VCC optimization
 (vcc.py), SLO violation detection (slo.py), Borg-like admission under VCCs
-(admission.py), fleet orchestration (fleet.py), and the beyond-paper spatial
-shifting extension (spatial.py).
+(admission.py), and the beyond-paper spatial shifting extension
+(spatial.py). ``stages.py`` composes them into THE staged day cycle (pure
+stage functions -> one pure day step) shared by both drivers; ``fleet.py``
+is the legacy mutable-FleetState adapter over it.
 """
 from repro.core import (admission, carbon, fleet, forecast, power, slo,
-                        spatial, vcc)
+                        spatial, stages, vcc)
 
 __all__ = ["admission", "carbon", "fleet", "forecast", "power", "slo",
-           "spatial", "vcc"]
+           "spatial", "stages", "vcc"]

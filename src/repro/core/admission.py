@@ -44,6 +44,15 @@ class DayResult:
     unmet: jnp.ndarray          # (n,) arrivals not served within the day
 
 
+# Pytree registration: the staged day step returns DayResults across jit
+# boundaries (stages.StepOut), so the fields must be data leaves.
+jax.tree_util.register_dataclass(
+    DayResult,
+    data_fields=["usage_flex", "usage_total", "reservations", "power",
+                 "carbon", "served", "arrived", "queue_end", "unmet"],
+    meta_fields=[])
+
+
 def run_day(vcc, u_if, arrivals, ratio, capacity, queue0, power_fn,
             intensity) -> DayResult:
     """Simulate one day for all clusters.

@@ -1,21 +1,30 @@
-"""Fleet synthesis + the CICS day cycle (paper Fig. 4/5).
+"""Legacy fleet API: mutable FleetState adapters over the staged day cycle.
 
-Ties the pipelines together exactly as deployed: every simulated day,
+The CICS day cycle itself lives in ``core/stages.py`` as pure, jit/vmap
+-safe stage functions — this module owns NO pipeline math anymore. It keeps
+the original ergonomic surface (a mutable ``FleetState`` you step one day
+at a time, with a ``record`` dict for paper-figure probes) as thin adapters:
 
-  1. carbon pipeline     — fetch day-ahead intensity forecasts per zone
-  2. power pipeline      — refit piecewise-linear power models on history
-  3. forecasting         — day-ahead U_IF(h), T_UF(d), T_R(d), R(h),
-                           trailing-error quantiles -> Theta, alpha (eq. 3)
-  4. optimization        — fleetwide risk-aware VCCs (eq. 4)
-  5. SLO gate + feedback — paused clusters get VCC = machine capacity
-  6. real time           — Borg-like admission under the VCC on ACTUAL load
-  7. telemetry           — roll histories; update SLO state
+  * ``init_fleet``   — synthesizes the fleet (same ``stages.synth_params``
+    leaves the sim scenarios use) and burns in ``hist_days`` of telemetry
+    under ``lax.scan`` (one dispatch — ``init_fleet`` is jit-compiled).
+  * ``day_cycle``    — converts FleetState -> (SimParams, SimState), runs
+    the SAME jitted day step as ``sim.engine`` (``stages.jitted_day_step``)
+    with neutral all-ones scenario slices, and writes the result back.
+  * ``_observe_day`` / ``make_power_fn`` / ``day_forecasts`` /
+    ``carbon_forecast_next`` / ``build_problem`` — per-stage adapters for
+    custom drivers (e.g. the Fig. 12 randomized controlled experiment in
+    ``benchmarks/fleet_bench.py``).
 
-The fleet itself is synthetic but calibrated: cluster-level day-ahead APE
-distributions match the bands of paper Fig. 7 (see benchmarks/).
+Because both paths run the same staged step, ``fleet.day_cycle`` and the
+sim engine's ``day_step`` agree bitwise from the same state (tested in
+tests/test_stages_parity.py). The fleet is synthetic but calibrated:
+cluster-level day-ahead APE distributions match the bands of paper Fig. 7
+(see benchmarks/).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
@@ -23,10 +32,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import admission, carbon, forecast, power, slo, vcc
+from repro.core import carbon, power, slo, stages, vcc
 
 f32 = jnp.float32
-HIST_DAYS = 91            # 13 weeks of rolling history
+HIST_DAYS = 91            # 13 weeks of rolling history (default burn-in)
+
+# re-exported synthesis + pure stage functions (legacy import sites)
+cluster_truth = stages.cluster_truth
+_sample_inflexible = stages.sample_inflexible
+_sample_arrivals = stages.sample_arrivals
+_true_ratio = stages.true_ratio
+build_problem_arrays = stages.build_problem_arrays
 
 
 @dataclass(frozen=True)
@@ -39,6 +55,7 @@ class FleetConfig:
     lambda_e: float = 0.08
     lambda_p: float = 0.05
     seed: int = 0
+    hist_days: int = HIST_DAYS
     slo: slo.SLOConfig = field(default_factory=slo.SLOConfig)
 
 
@@ -46,9 +63,11 @@ class FleetConfig:
 class FleetState:
     cfg: FleetConfig
     day: int
+    key: jnp.ndarray                 # rollout PRNG key (engine convention)
     # static cluster structure
     capacity: jnp.ndarray            # (n,)
     campus: jnp.ndarray              # (n,) int
+    zmap: jnp.ndarray                # (n,) int zone of cluster
     zone_of_campus: np.ndarray       # (n_campuses,)
     campus_limit: jnp.ndarray        # (n_campuses,) kW
     u_pow_cap: jnp.ndarray           # (n,)
@@ -56,6 +75,7 @@ class FleetState:
     truth: Dict[str, jnp.ndarray]
     pd_truth: power.PDTruth
     lam: jnp.ndarray                 # (n, pds) usage fractions
+    zone: Dict[str, jnp.ndarray]     # stacked grid-mix params, (zones,)
     # rolling history (oldest first)
     hist_uif: jnp.ndarray            # (n, HIST, 24)
     hist_flex_daily: jnp.ndarray     # (n, HIST)
@@ -66,308 +86,232 @@ class FleetState:
     hist_uif_pred: jnp.ndarray       # (n, HIST, 24) past U_IF predictions
     carbon_hist: jnp.ndarray         # (zones, HIST, 24)
     queue: jnp.ndarray               # (n,)
+    cf_queue: jnp.ndarray            # (n,) unshaped-counterfactual backlog
     slo_state: Dict[str, jnp.ndarray]
     shaping_allowed: jnp.ndarray     # (n,) bool
     zones: Tuple[carbon.ZoneConfig, ...] = ()
 
 
-# --------------------------------------------------------------- synthesis
-
-def cluster_truth(key, n: int):
-    """Latent per-cluster load-generating processes."""
-    ks = jax.random.split(key, 10)
-    capacity = jnp.exp(jax.random.normal(ks[0], (n,)) * 0.4 + 2.3)  # ~10 CPU
-    flex_share = jnp.clip(0.08 + 0.5 * jax.random.uniform(ks[1], (n,)),
-                          0.05, 0.6)
-    base_if = capacity * (0.35 + 0.2 * jax.random.uniform(ks[2], (n,)))
-    diurnal_amp = 0.15 + 0.2 * jax.random.uniform(ks[3], (n,))
-    peak_hour = 8.0 + 10.0 * jax.random.uniform(ks[4], (n,))
-    weekly_amp = 0.05 + 0.1 * jax.random.uniform(ks[5], (n,))
-    noise = 0.02 + 0.06 * jax.random.uniform(ks[6], (n,))
-    arr_level = capacity * flex_share * (0.5 + 0.4 *
-                                         jax.random.uniform(ks[7], (n,)))
-    ratio_a = 1.15 + 0.3 * jax.random.uniform(ks[8], (n,))
-    ratio_b = -0.05 - 0.08 * jax.random.uniform(ks[9], (n,))
-    return {"capacity": capacity, "flex_share": flex_share,
-            "base_if": base_if, "diurnal_amp": diurnal_amp,
-            "peak_hour": peak_hour, "weekly_amp": weekly_amp,
-            "noise": noise, "arr_level": arr_level,
-            "ratio_a": ratio_a, "ratio_b": ratio_b}
+def _stage_cfg(cfg: FleetConfig) -> stages.StageConfig:
+    return stages.StageConfig(slo_margin=cfg.slo.margin,
+                              slo_pause_days=cfg.slo.pause_days)
 
 
-def _cluster_truth(key, cfg: FleetConfig):
-    return cluster_truth(key, cfg.n_clusters)
+# --------------------------------------------- FleetState <-> stage pytrees
+
+def sim_params(state: FleetState) -> stages.SimParams:
+    """View a FleetState as the engine's array-only SimParams (neutral
+    one-day schedules: the legacy path runs nominal operation)."""
+    cfg = state.cfg
+    ones = functools.partial(jnp.ones, dtype=f32)
+    return stages.SimParams(
+        key=state.key, truth=state.truth,
+        pd_idle=state.pd_truth.idle_kw, pd_slope=state.pd_truth.slope_kw,
+        pd_curve=state.pd_truth.curve, lam=state.lam, zone=state.zone,
+        lambda_e=jnp.asarray(cfg.lambda_e, f32),
+        lambda_p=jnp.asarray(cfg.lambda_p, f32),
+        gamma=jnp.asarray(cfg.gamma, f32),
+        mobility=jnp.zeros((), f32),
+        green_scale=ones((1, cfg.n_zones)),
+        coal_scale=ones((1, cfg.n_zones)),
+        cap_scale=ones((1, cfg.n_clusters)),
+        arrival_scale=ones((1, cfg.n_clusters)),
+        campus_scale=ones((1, cfg.n_campuses)))
 
 
-def _sample_inflexible(key, truth, day):
-    """Actual inflexible hourly usage for one day. (n, 24)."""
-    hours = jnp.arange(24, dtype=f32)
-    d = jnp.minimum(jnp.abs(hours[None] - truth["peak_hour"][:, None]),
-                    24 - jnp.abs(hours[None] - truth["peak_hour"][:, None]))
-    diurnal = 1.0 + truth["diurnal_amp"][:, None] * jnp.exp(
-        -0.5 * (d / 4.0) ** 2)
-    weekly = 1.0 + truth["weekly_amp"][:, None] * jnp.cos(
-        2 * jnp.pi * (day % 7) / 7.0)
-    eps = 1.0 + truth["noise"][:, None] * jax.random.normal(
-        key, (truth["base_if"].shape[0], 24))
-    return truth["base_if"][:, None] * diurnal * weekly * eps
+def sim_state(state: FleetState) -> stages.SimState:
+    """View a FleetState as the engine's array-only SimState."""
+    return stages.SimState(
+        day=jnp.asarray(state.day, jnp.int32),
+        campus=state.campus, zmap=state.zmap,
+        campus_limit=state.campus_limit, u_pow_cap=state.u_pow_cap,
+        hist_uif=state.hist_uif, hist_flex_daily=state.hist_flex_daily,
+        hist_res_daily=state.hist_res_daily, hist_usage=state.hist_usage,
+        hist_res=state.hist_res, hist_tr_pred=state.hist_tr_pred,
+        hist_uif_pred=state.hist_uif_pred, carbon_hist=state.carbon_hist,
+        queue=state.queue, cf_queue=state.cf_queue,
+        crowded_streak=state.slo_state["crowded_streak"],
+        pause_left=state.slo_state["pause_left"],
+        violation_days=state.slo_state["violation_days"],
+        observed_days=state.slo_state["observed_days"],
+        shaping_allowed=state.shaping_allowed)
 
 
-def _sample_arrivals(key, truth, day):
-    """Flexible CPU-hour arrivals per hour. (n, 24)."""
-    hours = jnp.arange(24, dtype=f32)
-    prof = 0.6 + 0.8 * jnp.exp(-0.5 * ((hours[None] - 11.0) / 5.0) ** 2)
-    weekly = 1.0 + 0.5 * truth["weekly_amp"][:, None] * jnp.cos(
-        2 * jnp.pi * (day % 7) / 7.0)
-    eps = 1.0 + 2.5 * truth["noise"][:, None] * jax.random.normal(
-        key, (truth["arr_level"].shape[0], 24))
-    return jnp.clip(truth["arr_level"][:, None] * prof * weekly * eps / 24.0
-                    * 24.0 / prof.sum() * 24.0, 0.0, None)
-
-
-def _true_ratio(truth, usage):
-    return jnp.clip(truth["ratio_a"][:, None]
-                    + truth["ratio_b"][:, None]
-                    * jnp.log(jnp.clip(usage, 1e-6, None)), 1.05, 3.0)
-
-
-def init_fleet(cfg: FleetConfig) -> FleetState:
-    key = jax.random.PRNGKey(cfg.seed)
-    ks = jax.random.split(key, 8)
-    n = cfg.n_clusters
-    truth = _cluster_truth(ks[0], cfg)
-    zones = carbon.default_zones(cfg.n_zones)
-    zone_of_campus = np.arange(cfg.n_campuses) % cfg.n_zones
-    campus = jnp.asarray(np.arange(n) % cfg.n_campuses, jnp.int32)
-    # PD power truth
-    npd = n * cfg.pds_per_cluster
-    pd_truth = power.PDTruth(
-        idle_kw=60.0 + 40.0 * jax.random.uniform(ks[1], (npd,)),
-        slope_kw=250.0 + 150.0 * jax.random.uniform(ks[2], (npd,)),
-        curve=0.8 + 0.5 * jax.random.uniform(ks[3], (npd,)),
-    )
-    lam = jax.nn.softmax(jax.random.normal(ks[4], (n, cfg.pds_per_cluster)),
-                         axis=1)
-    # carbon history
-    zone_hist = jnp.stack([carbon.simulate_zone(jax.random.fold_in(ks[5], i),
-                                                z, HIST_DAYS)
-                           for i, z in enumerate(zones)])
-    state = FleetState(
-        cfg=cfg, day=HIST_DAYS,
-        capacity=truth["capacity"], campus=campus,
-        zone_of_campus=zone_of_campus,
-        campus_limit=jnp.full((cfg.n_campuses,), 0.0),
-        u_pow_cap=truth["capacity"] * 0.95,
-        truth=truth, pd_truth=pd_truth, lam=lam,
-        hist_uif=jnp.zeros((n, HIST_DAYS, 24)),
-        hist_flex_daily=jnp.zeros((n, HIST_DAYS)),
-        hist_res_daily=jnp.zeros((n, HIST_DAYS)),
-        hist_usage=jnp.zeros((n, HIST_DAYS, 24)),
-        hist_res=jnp.zeros((n, HIST_DAYS, 24)),
-        hist_tr_pred=jnp.zeros((n, HIST_DAYS)),
-        hist_uif_pred=jnp.zeros((n, HIST_DAYS, 24)),
-        carbon_hist=zone_hist,
-        queue=jnp.zeros((n,)),
-        slo_state=slo.init_state(n),
-        shaping_allowed=jnp.ones((n,), bool),
-        zones=zones,
-    )
-    # burn-in: run HIST_DAYS unshaped days to fill history
-    for d in range(HIST_DAYS):
-        state = _observe_day(state, d, shaped=False)
-    # backfill prediction history with actuals (zero-error prior); the
-    # trailing-error quantiles become honest within days of operation
-    state.hist_tr_pred = state.hist_res_daily
-    state.hist_uif_pred = state.hist_uif
-    # campus limits: 95% of observed campus peak (forces peak shaving)
-    camp_pow = np.zeros((cfg.n_campuses,))
-    power_fn, _, _ = make_power_fn(state)
-    upow = np.asarray(jax.vmap(power_fn, in_axes=1, out_axes=1)(
-        state.hist_usage[:, -7:].reshape(n, -1)))
-    peak = upow.max(axis=1)
-    for c in range(cfg.n_campuses):
-        camp_pow[c] = peak[np.asarray(campus) == c].sum() * 0.97
-    state.campus_limit = jnp.asarray(camp_pow, f32)
+def _writeback(state: FleetState, s: stages.SimState) -> FleetState:
+    state.day = int(s.day)
+    state.campus_limit = s.campus_limit
+    state.hist_uif = s.hist_uif
+    state.hist_flex_daily = s.hist_flex_daily
+    state.hist_res_daily = s.hist_res_daily
+    state.hist_usage = s.hist_usage
+    state.hist_res = s.hist_res
+    state.hist_tr_pred = s.hist_tr_pred
+    state.hist_uif_pred = s.hist_uif_pred
+    state.carbon_hist = s.carbon_hist
+    state.queue = s.queue
+    state.cf_queue = s.cf_queue
+    state.slo_state = {"crowded_streak": s.crowded_streak,
+                       "pause_left": s.pause_left,
+                       "violation_days": s.violation_days,
+                       "observed_days": s.observed_days}
+    state.shaping_allowed = s.shaping_allowed
     return state
 
 
+# --------------------------------------------------------------- synthesis
+
+def _cluster_truth(key, cfg: FleetConfig):
+    return stages.cluster_truth(key, cfg.n_clusters)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_init(n: int, m: int, z: int, hist_days: int):
+    return jax.jit(stages.make_init(n, m, z, hist_days))
+
+
+def init_fleet(cfg: FleetConfig) -> FleetState:
+    """Synthesize + burn in a fleet. The burn-in is a single jitted
+    ``lax.scan`` over ``cfg.hist_days`` unshaped days (the old eager
+    Python loop cost hundreds of dispatches per day)."""
+    sp = stages.synth_params(cfg.seed, cfg.n_clusters, cfg.pds_per_cluster,
+                             cfg.n_zones)
+    pdt = power.PDTruth(idle_kw=sp["pd_idle"], slope_kw=sp["pd_slope"],
+                        curve=sp["pd_curve"])
+    zone_of_campus = np.arange(cfg.n_campuses) % cfg.n_zones
+    state = FleetState(
+        cfg=cfg, day=0, key=sp["key"],
+        capacity=sp["truth"]["capacity"],
+        campus=jnp.asarray(np.arange(cfg.n_clusters) % cfg.n_campuses,
+                           jnp.int32),
+        zmap=jnp.asarray(zone_of_campus[np.arange(cfg.n_clusters)
+                                        % cfg.n_campuses], jnp.int32),
+        zone_of_campus=zone_of_campus,
+        campus_limit=jnp.zeros((cfg.n_campuses,), f32),
+        u_pow_cap=sp["truth"]["capacity"] * 0.95,
+        truth=sp["truth"], pd_truth=pdt, lam=sp["lam"], zone=sp["zone"],
+        hist_uif=jnp.zeros((cfg.n_clusters, cfg.hist_days, 24), f32),
+        hist_flex_daily=jnp.zeros((cfg.n_clusters, cfg.hist_days), f32),
+        hist_res_daily=jnp.zeros((cfg.n_clusters, cfg.hist_days), f32),
+        hist_usage=jnp.zeros((cfg.n_clusters, cfg.hist_days, 24), f32),
+        hist_res=jnp.zeros((cfg.n_clusters, cfg.hist_days, 24), f32),
+        hist_tr_pred=jnp.zeros((cfg.n_clusters, cfg.hist_days), f32),
+        hist_uif_pred=jnp.zeros((cfg.n_clusters, cfg.hist_days, 24), f32),
+        carbon_hist=jnp.zeros((cfg.n_zones, cfg.hist_days, 24), f32),
+        queue=jnp.zeros((cfg.n_clusters,), f32),
+        cf_queue=jnp.zeros((cfg.n_clusters,), f32),
+        slo_state=slo.init_state(cfg.n_clusters),
+        shaping_allowed=jnp.ones((cfg.n_clusters,), bool),
+        zones=carbon.default_zones(cfg.n_zones),
+    )
+    init = _jitted_init(cfg.n_clusters, cfg.n_campuses, cfg.n_zones,
+                        cfg.hist_days)
+    return _writeback(state, init(sim_params(state)))
+
+
+# ---------------------------------------------------- per-stage adapters
+
+def _day_key(state: FleetState, day) -> jnp.ndarray:
+    return jax.random.fold_in(state.key, day)
+
+
 def power_model_from_history(hist_usage, lam, capacity, pd_truth, key):
-    """Pure core of make_power_fn: fit PD piecewise power models on recent
-    cluster usage history and return cluster power/slope closures.
+    """Back-compat wrapper over ``stages.power_stage``: returns cluster
+    power/slope closures + the fitted (coef, breaks)."""
+    model = stages.power_stage(hist_usage, lam, capacity, pd_truth, key)
 
-    hist_usage: (n, hist, 24); lam: (n, pds); capacity: (n,);
-    pd_truth: power.PDTruth with (n*pds,) fields. jit/vmap-safe.
-    """
-    n, npd = lam.shape
-    u_cl = hist_usage[:, -28:].reshape(n, -1)                # (n, t)
-    u_pd = (lam[..., None] * u_cl[:, None, :]).reshape(n * npd, -1)
-    u_norm = u_pd / jnp.clip(
-        capacity[:, None, None].repeat(npd, 1).reshape(n * npd, 1),
-        1e-6, None)
-    p_pd = power.simulate_pd_power(key, pd_truth, u_norm)
-    coef, breaks = power.fit_pd_models(u_norm, p_pd)
-    # materialization point: keeps the fitted model's numerics independent
-    # of how downstream consumers fuse (bitwise batched/sequential parity)
-    coef, breaks = jax.lax.optimization_barrier((coef, breaks))
-
-    cap_pd = capacity[:, None].repeat(npd, 1).reshape(-1)
-
-    def cluster_power_fn(u_cluster):                         # (n,) -> (n,)
-        u_pd_now = (lam * u_cluster[:, None]).reshape(-1)
-        u_n = u_pd_now / jnp.clip(cap_pd, 1e-6, None)
-        p = jax.vmap(power.pd_power)(coef, breaks, u_n[:, None])[:, 0]
-        return p.reshape(n, npd).sum(axis=1)
+    def cluster_power_fn(u_cluster):
+        return stages.model_power(model, u_cluster)
 
     def cluster_slope_fn(u_cluster):
-        u_pd_now = (lam * u_cluster[:, None]).reshape(-1)
-        u_n = u_pd_now / jnp.clip(cap_pd, 1e-6, None)
-        s = jax.vmap(power.pd_slope)(coef, breaks, u_n[:, None])[:, 0]
-        s = s / jnp.clip(cap_pd, 1e-6, None)       # d kW / d cluster-CPU
-        return (s.reshape(n, npd) * lam).sum(axis=1)
+        return stages.model_slope(model, u_cluster)
 
-    return cluster_power_fn, cluster_slope_fn, (coef, breaks)
+    return cluster_power_fn, cluster_slope_fn, (model.coef, model.breaks)
 
 
 def make_power_fn(state: FleetState):
     """Cluster power from PD piecewise models fit on recent history."""
-    return power_model_from_history(state.hist_usage, state.lam,
-                                    state.truth["capacity"], state.pd_truth,
-                                    jax.random.PRNGKey(state.day))
+    return power_model_from_history(
+        state.hist_usage, state.lam, state.truth["capacity"],
+        state.pd_truth, jax.random.fold_in(_day_key(state, state.day), 1))
 
 
 def day_forecasts_arrays(hist_uif, hist_flex_daily, hist_res_daily,
                          hist_usage, hist_res, hist_tr_pred, hist_uif_pred,
                          day, gamma):
-    """Pure core of day_forecasts: next-day forecasting pipeline from
-    rolling history arrays. All (n, hist[, 24]); day/gamma may be traced."""
-    n = hist_uif.shape[0]
-    dow = jnp.asarray(day % 7)
-    uif_pred = jax.vmap(lambda h: forecast.forecast_inflexible(h, dow))(
-        hist_uif)
-    tuf_pred = jax.vmap(lambda d: forecast.forecast_daily_total(d, dow))(
-        hist_flex_daily)
-    tr_pred = jax.vmap(lambda d: forecast.forecast_daily_total(d, dow))(
-        hist_res_daily)
-    ra, rb = jax.vmap(forecast.fit_ratio_model)(
-        hist_usage[:, -28:].reshape(n, -1),
-        hist_res[:, -28:].reshape(n, -1))
-    eps97 = jax.vmap(lambda p, a: forecast.relative_error_quantile(
-        p[-90:], a[-90:], 0.97))(hist_tr_pred, hist_res_daily)
-    theta = forecast.theta_requirement(tr_pred, eps97)
-    alpha = jax.vmap(forecast.alpha_inflation)(theta, uif_pred, tuf_pred,
-                                               ra, rb)
-    # (1-gamma) hourly inflexible quantile from trailing prediction errors
-    epsq = jax.vmap(lambda p, a: forecast.relative_error_quantile(
-        p[-28:].reshape(-1), a[-28:].reshape(-1), 1 - gamma))(
-        hist_uif_pred, hist_uif)
-    uif_q = uif_pred * (1.0 + jnp.clip(epsq, 0.0, 1.0)[:, None])
-    return {"uif": uif_pred, "tuf": tuf_pred, "tr": tr_pred,
-            "ratio_a": ra, "ratio_b": rb, "theta": theta, "alpha": alpha,
-            "uif_q": uif_q}
+    """Back-compat alias of ``stages.forecast_stage``."""
+    return stages.forecast_stage(hist_uif, hist_flex_daily, hist_res_daily,
+                                 hist_usage, hist_res, hist_tr_pred,
+                                 hist_uif_pred, day, gamma)
 
 
 def day_forecasts(state: FleetState):
     """Run the forecasting pipeline for the next day (vmapped)."""
-    return day_forecasts_arrays(
+    return stages.forecast_stage(
         state.hist_uif, state.hist_flex_daily, state.hist_res_daily,
         state.hist_usage, state.hist_res, state.hist_tr_pred,
         state.hist_uif_pred, state.day, state.cfg.gamma)
 
 
-def carbon_forecast_next(state: FleetState, day: int):
+def carbon_forecast_next(state: FleetState, day):
     """Actual + day-ahead forecast intensity per cluster for the day."""
-    key = jax.random.PRNGKey(1000 + day)
-    actuals, forecasts = [], []
-    for i, z in enumerate(state.zones):
-        act = carbon.simulate_zone(jax.random.fold_in(key, i), z, 1)[0]
-        fc = carbon.forecast_day_ahead(jax.random.fold_in(key, 100 + i),
-                                       state.carbon_hist[i], act,
-                                       z.weather_vol * 0.15)
-        actuals.append(act)
-        forecasts.append(fc)
-    actual_z = jnp.stack(actuals)         # (zones, 24)
-    fc_z = jnp.stack(forecasts)
-    zmap = jnp.asarray(state.zone_of_campus[np.asarray(state.campus)],
-                       jnp.int32)
-    return actual_z, fc_z, actual_z[zmap], fc_z[zmap]
-
-
-def build_problem_arrays(fc, eta_fc, power_fn, slope_fn, queue, u_pow_cap,
-                         capacity, campus, campus_limit, lambda_e, lambda_p
-                         ) -> vcc.VCCProblem:
-    """Pure core of build_problem: assemble the fleetwide VCC problem from
-    forecast dict + carbon forecast + structural arrays."""
-    # risk-aware daily flexible budget (eq. 3) + carried-over queue
-    tau = fc["alpha"] * fc["tuf"] + queue
-    u_nom = fc["uif"] + tau[:, None] / 24.0
-    pow_nom = jax.vmap(power_fn, in_axes=1, out_axes=1)(u_nom)
-    pi = jax.vmap(slope_fn, in_axes=1, out_axes=1)(u_nom)
-    ratio = forecast.ratio_at(fc["ratio_a"][:, None], fc["ratio_b"][:, None],
-                              u_nom)
-    return vcc.VCCProblem(
-        eta=eta_fc, u_if=fc["uif"], u_if_q=fc["uif_q"], tau=tau,
-        pow_nom=pow_nom, pi=pi, u_pow_cap=u_pow_cap,
-        capacity=capacity, ratio=ratio, campus=campus,
-        campus_limit=campus_limit, lambda_e=lambda_e, lambda_p=lambda_p)
+    nz = state.carbon_hist.shape[0]
+    ones = jnp.ones((nz,), f32)
+    act_z, fc_z = stages.carbon_stage(state.zone, state.carbon_hist,
+                                      jax.random.fold_in(
+                                          _day_key(state, day), 4),
+                                      ones, ones)
+    return act_z, fc_z, act_z[state.zmap], fc_z[state.zmap]
 
 
 def build_problem(state: FleetState, fc, eta_fc, power_fn, slope_fn
                   ) -> vcc.VCCProblem:
-    return build_problem_arrays(fc, eta_fc, power_fn, slope_fn, state.queue,
-                                state.u_pow_cap, state.capacity,
-                                state.campus, state.campus_limit,
-                                state.cfg.lambda_e, state.cfg.lambda_p)
+    return stages.build_problem_arrays(
+        fc, eta_fc, power_fn, slope_fn, state.queue, state.u_pow_cap,
+        state.capacity, state.campus, state.campus_limit,
+        state.cfg.lambda_e, state.cfg.lambda_p)
 
 
-def _observe_day(state: FleetState, day: int, shaped: bool,
+def _observe_day(state: FleetState, day, shaped: bool,
                  vcc_curve=None, treat_mask=None, collect=False):
-    """Run one actual day (optionally VCC-shaped) and roll histories."""
+    """Run one actual day (optionally VCC-shaped) and roll histories.
+
+    Adapter over ``stages.observe_stage`` for custom drivers (Fig. 12's
+    randomized treatment); ``day_cycle`` runs the full staged step instead.
+    """
     cfg = state.cfg
     n = cfg.n_clusters
-    key = jax.random.PRNGKey(10_000 + day)
-    k1, k2 = jax.random.split(key)
-    u_if = _sample_inflexible(k1, state.truth, day)
-    arrivals = _sample_arrivals(k2, state.truth, day)
-    usage_unshaped = u_if + arrivals            # rough for ratio sampling
-    ratio_true = _true_ratio(state.truth, usage_unshaped)
-    # burn-in uses a cheap linear power proxy (power is telemetry-only here)
-    power_fn, slope_fn, _ = make_power_fn(state) if day >= HIST_DAYS else \
-        (lambda u: 100.0 + 300.0 * u, lambda u: jnp.full_like(u, 300.0),
-         None)
+    day_key = _day_key(state, day)
+    power_fn, _, _ = power_model_from_history(
+        state.hist_usage, state.lam, state.truth["capacity"],
+        state.pd_truth, jax.random.fold_in(day_key, 1))
     if vcc_curve is None:
         vcc_curve = jnp.broadcast_to(state.capacity[:, None] * 10.0,
                                      (n, 24))
     if treat_mask is not None:
         vcc_curve = jnp.where(treat_mask[:, None], vcc_curve,
                               state.capacity[:, None] * 10.0)
-    # actual carbon for the day
-    keyz = jax.random.PRNGKey(1000 + day)
-    actual_z = jnp.stack([
-        carbon.simulate_zone(jax.random.fold_in(keyz, i), z, 1)[0]
-        for i, z in enumerate(state.zones)])
-    zmap = jnp.asarray(state.zone_of_campus[np.asarray(state.campus)],
-                       jnp.int32)
-    intensity = actual_z[zmap]
-    res = admission.run_day(vcc_curve, u_if, arrivals, ratio_true,
-                            state.capacity, state.queue, power_fn,
-                            intensity)
+    # actual carbon for the day (same draw as carbon_forecast_next)
+    nz = state.carbon_hist.shape[0]
+    ones_z = jnp.ones((nz,), f32)
+    act_z, _ = stages.carbon_stage(state.zone, state.carbon_hist,
+                                   jax.random.fold_in(day_key, 4),
+                                   ones_z, ones_z)
+    intensity = act_z[state.zmap]
+    res, cf, u_if, _ = stages.observe_stage(
+        state.truth, jnp.asarray(day, jnp.int32), day_key, vcc_curve,
+        state.capacity, jnp.ones((n,), f32), state.queue, state.cf_queue,
+        power_fn, intensity)
     # roll histories
-    def roll(hist, new):
-        return jnp.concatenate([hist[:, 1:], new[:, None]], axis=1)
-
-    state.hist_uif = jnp.concatenate(
-        [state.hist_uif[:, 1:], u_if[:, None]], axis=1)
-    state.hist_flex_daily = roll(state.hist_flex_daily, res.served)
-    state.hist_res_daily = roll(state.hist_res_daily,
-                                res.reservations.sum(axis=1))
-    state.hist_usage = jnp.concatenate(
-        [state.hist_usage[:, 1:], res.usage_total[:, None]], axis=1)
-    state.hist_res = jnp.concatenate(
-        [state.hist_res[:, 1:], res.reservations[:, None]], axis=1)
-    state.carbon_hist = jnp.concatenate(
-        [state.carbon_hist[:, 1:], actual_z[:, None]], axis=1)
+    state.hist_uif = stages.roll(state.hist_uif, u_if)
+    state.hist_flex_daily = stages.roll(state.hist_flex_daily, res.served)
+    state.hist_res_daily = stages.roll(state.hist_res_daily,
+                                       stages.hour_sum(res.reservations))
+    state.hist_usage = stages.roll(state.hist_usage, res.usage_total)
+    state.hist_res = stages.roll(state.hist_res, res.reservations)
+    state.carbon_hist = stages.roll(state.carbon_hist, act_z)
     state.queue = res.queue_end
-    state.day = day + 1
+    state.cf_queue = cf.queue_end
+    state.day = int(day) + 1
     if collect:
         return state, res, intensity
     return state
@@ -375,28 +319,20 @@ def _observe_day(state: FleetState, day: int, shaped: bool,
 
 def day_cycle(state: FleetState, record: Optional[dict] = None
               ) -> FleetState:
-    """One full CICS day: forecast -> optimize -> shape -> observe."""
-    day = state.day
-    power_fn, slope_fn, _ = make_power_fn(state)
-    fc = day_forecasts(state)
-    _, _, eta_act, eta_fc = carbon_forecast_next(state, day)
-    prob = build_problem(state, fc, eta_fc, power_fn, slope_fn)
-    sol = vcc.solve_vcc(prob)
-    vcc_curve = jnp.where((state.shaping_allowed & sol.shaped)[:, None],
-                          sol.vcc, state.capacity[:, None] * 10.0)
-    # record predictions for trailing-error quantiles
-    state.hist_tr_pred = jnp.concatenate(
-        [state.hist_tr_pred[:, 1:], fc["tr"][:, None]], axis=1)
-    state.hist_uif_pred = jnp.concatenate(
-        [state.hist_uif_pred[:, 1:], fc["uif"][:, None]], axis=1)
-    state, res, intensity = _observe_day(state, day, True, vcc_curve,
-                                         collect=True)
-    new_slo, allowed = slo.update(state.slo_state, state.cfg.slo,
-                                  res.reservations.sum(axis=1),
-                                  vcc_curve.sum(axis=1), res.unmet)
-    state.slo_state = new_slo
-    state.shaping_allowed = allowed
+    """One full CICS day: forecast -> optimize -> shape -> observe.
+
+    Runs the SAME jitted staged step as the sim engine (one dispatch per
+    day) with neutral scenario slices, then writes back into the mutable
+    FleetState. ``record`` (if given) receives the probes the paper-figure
+    benchmarks read: fc, sol, vcc, result, cf_result, intensity, problem.
+    """
+    cfg = state.cfg
+    step = stages.jitted_day_step(_stage_cfg(cfg))
+    xs = stages.ones_xs(cfg.n_clusters, cfg.n_campuses, cfg.n_zones)
+    new_state, out = step(sim_params(state), sim_state(state), xs)
+    state = _writeback(state, new_state)
     if record is not None:
-        record.update(dict(fc=fc, sol=sol, vcc=vcc_curve, result=res,
-                           intensity=intensity, problem=prob))
+        record.update(dict(fc=out.fc, sol=out.sol, vcc=out.vcc_curve,
+                           result=out.res, cf_result=out.cf,
+                           intensity=out.eta_act, problem=out.prob))
     return state

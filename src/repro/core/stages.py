@@ -1,0 +1,602 @@
+"""The staged CICS day cycle — the ONE implementation of the paper's loop.
+
+Every simulated day is the same pipeline (paper Fig. 4/5):
+
+  carbon_stage    — scenario-perturbed grid simulation + day-ahead
+                    intensity forecast per zone
+  power_stage     — refit PD piecewise-linear power models on history
+  forecast_stage  — day-ahead U_IF(h), T_UF(d), T_R(d), R(h), trailing
+                    -error quantiles -> Theta, alpha (eq. 3)
+  optimize_stage  — fleetwide risk-aware VCCs (eq. 4) + optional spatial
+                    pre-shift; PGD inner loop via kernels.vcc_pgd
+  (SLO gate)      — paused clusters get VCC = machine capacity
+  observe_stage   — Borg-like admission on ACTUAL load, shaped + unshaped
+                    counterfactual in the same trace
+  slo_stage       — violation detection + shaping-pause feedback
+
+Each stage is a pure, jit/vmap-safe function from array pytrees to array
+pytrees, with an ``optimization_barrier`` materialization pin at its
+boundary: XLA must not re-fuse (and re-round) a stage's output when its
+consumers change, or the sim engine's bitwise batched==sequential parity
+contract breaks. ``make_day_step`` composes the stages into one pure day;
+``burnin_step``/``make_init`` build a burned-in state under ``lax.scan``.
+
+Both drivers are thin adapters over this module: ``sim.engine`` scans/vmaps
+``make_day_step`` across days and a (scenario x seed) batch, and the legacy
+``core.fleet`` API steps the SAME jitted day (``jitted_day_step``) from a
+mutable ``FleetState``. There is no second copy of the day cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import admission, carbon, forecast, power, slo, spatial, vcc
+
+f32 = jnp.float32
+
+# ordered sum over the last axis: the batch-invariant reduction primitive
+# (single definition — the parity contract depends on these staying one op)
+hour_sum = admission.hour_sum
+
+
+def _register_barrier_batching():
+    """jax<=0.4 ships no vmap rule for optimization_barrier (newer jax
+    does). The rule is the identity on batch dims: barrier each operand,
+    keep its batch axis."""
+    try:
+        from jax._src.interpreters import batching
+        from jax._src.lax import lax as _lax
+        prim = _lax.optimization_barrier_p
+    except (ImportError, AttributeError):    # pragma: no cover
+        return
+    if prim in batching.primitive_batchers:
+        return
+
+    def rule(args, dims):
+        return prim.bind(*args), dims
+
+    batching.primitive_batchers[prim] = rule
+
+
+_register_barrier_batching()
+
+
+# ------------------------------------------------------------- fleet synth
+
+def cluster_truth(key, n: int):
+    """Latent per-cluster load-generating processes."""
+    ks = jax.random.split(key, 10)
+    capacity = jnp.exp(jax.random.normal(ks[0], (n,)) * 0.4 + 2.3)  # ~10 CPU
+    flex_share = jnp.clip(0.08 + 0.5 * jax.random.uniform(ks[1], (n,)),
+                          0.05, 0.6)
+    base_if = capacity * (0.35 + 0.2 * jax.random.uniform(ks[2], (n,)))
+    diurnal_amp = 0.15 + 0.2 * jax.random.uniform(ks[3], (n,))
+    peak_hour = 8.0 + 10.0 * jax.random.uniform(ks[4], (n,))
+    weekly_amp = 0.05 + 0.1 * jax.random.uniform(ks[5], (n,))
+    noise = 0.02 + 0.06 * jax.random.uniform(ks[6], (n,))
+    arr_level = capacity * flex_share * (0.5 + 0.4 *
+                                         jax.random.uniform(ks[7], (n,)))
+    ratio_a = 1.15 + 0.3 * jax.random.uniform(ks[8], (n,))
+    ratio_b = -0.05 - 0.08 * jax.random.uniform(ks[9], (n,))
+    return {"capacity": capacity, "flex_share": flex_share,
+            "base_if": base_if, "diurnal_amp": diurnal_amp,
+            "peak_hour": peak_hour, "weekly_amp": weekly_amp,
+            "noise": noise, "arr_level": arr_level,
+            "ratio_a": ratio_a, "ratio_b": ratio_b}
+
+
+def sample_inflexible(key, truth, day):
+    """Actual inflexible hourly usage for one day. (n, 24)."""
+    hours = jnp.arange(24, dtype=f32)
+    d = jnp.minimum(jnp.abs(hours[None] - truth["peak_hour"][:, None]),
+                    24 - jnp.abs(hours[None] - truth["peak_hour"][:, None]))
+    diurnal = 1.0 + truth["diurnal_amp"][:, None] * jnp.exp(
+        -0.5 * (d / 4.0) ** 2)
+    weekly = 1.0 + truth["weekly_amp"][:, None] * jnp.cos(
+        2 * jnp.pi * (day % 7) / 7.0)
+    eps = 1.0 + truth["noise"][:, None] * jax.random.normal(
+        key, (truth["base_if"].shape[0], 24))
+    return truth["base_if"][:, None] * diurnal * weekly * eps
+
+
+def sample_arrivals(key, truth, day):
+    """Flexible CPU-hour arrivals per hour. (n, 24)."""
+    hours = jnp.arange(24, dtype=f32)
+    prof = 0.6 + 0.8 * jnp.exp(-0.5 * ((hours[None] - 11.0) / 5.0) ** 2)
+    weekly = 1.0 + 0.5 * truth["weekly_amp"][:, None] * jnp.cos(
+        2 * jnp.pi * (day % 7) / 7.0)
+    eps = 1.0 + 2.5 * truth["noise"][:, None] * jax.random.normal(
+        key, (truth["arr_level"].shape[0], 24))
+    return jnp.clip(truth["arr_level"][:, None] * prof * weekly * eps / 24.0
+                    * 24.0 / prof.sum() * 24.0, 0.0, None)
+
+
+def true_ratio(truth, usage):
+    return jnp.clip(truth["ratio_a"][:, None]
+                    + truth["ratio_b"][:, None]
+                    * jnp.log(jnp.clip(usage, 1e-6, None)), 1.05, 3.0)
+
+
+def synth_params(seed: int, n_clusters: int, pds_per_cluster: int,
+                 n_zones: int) -> Dict[str, object]:
+    """Synthesize the array-only fleet parameter leaves shared by BOTH
+    entry points (sim scenarios and the legacy FleetConfig): latent truth,
+    PD power-curve truth, PD usage fractions, stacked zone params, and the
+    rollout PRNG key. Pure: identical inputs -> identical arrays."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 8)
+    n, npds = n_clusters, pds_per_cluster
+    truth = cluster_truth(ks[0], n)
+    npd = n * npds
+    return {
+        "key": jax.random.fold_in(key, 17),
+        "truth": truth,
+        "pd_idle": 60.0 + 40.0 * jax.random.uniform(ks[1], (npd,)),
+        "pd_slope": 250.0 + 150.0 * jax.random.uniform(ks[2], (npd,)),
+        "pd_curve": 0.8 + 0.5 * jax.random.uniform(ks[3], (npd,)),
+        "lam": jax.nn.softmax(jax.random.normal(ks[4], (n, npds)), axis=1),
+        "zone": carbon.stack_zone_params(carbon.default_zones(n_zones)),
+    }
+
+
+# ------------------------------------------------------------ state pytrees
+
+class SimParams(NamedTuple):
+    """Per-rollout day-cycle parameters. All leaves are arrays; stacking a
+    list of SimParams along axis 0 gives the (scenario x seed) batch."""
+    key: jnp.ndarray                  # PRNG key data, (2,) uint32
+    truth: Dict[str, jnp.ndarray]     # latent cluster processes, (n,)
+    pd_idle: jnp.ndarray              # (n*pds,)
+    pd_slope: jnp.ndarray             # (n*pds,)
+    pd_curve: jnp.ndarray             # (n*pds,)
+    lam: jnp.ndarray                  # (n, pds) PD usage fractions
+    zone: Dict[str, jnp.ndarray]      # grid-mix params, (z,)
+    lambda_e: jnp.ndarray             # () carbon price
+    lambda_p: jnp.ndarray             # () peak-power price
+    gamma: jnp.ndarray                # () power-capping violation prob
+    mobility: jnp.ndarray             # () spatial-shift mobility (0 = off)
+    green_scale: jnp.ndarray          # (days, z) solar+wind multiplier
+    coal_scale: jnp.ndarray           # (days, z) coal-share multiplier
+    cap_scale: jnp.ndarray            # (days, n) capacity multiplier
+    arrival_scale: jnp.ndarray        # (days, n) flexible-demand multiplier
+    campus_scale: jnp.ndarray         # (days, m) campus power-limit scale
+
+
+class SimState(NamedTuple):
+    """Array-only day-cycle state (the scan carry)."""
+    day: jnp.ndarray                  # () int32
+    campus: jnp.ndarray               # (n,) int32
+    zmap: jnp.ndarray                 # (n,) int32 zone of cluster
+    campus_limit: jnp.ndarray         # (m,) kW
+    u_pow_cap: jnp.ndarray            # (n,)
+    hist_uif: jnp.ndarray             # (n, H, 24)
+    hist_flex_daily: jnp.ndarray      # (n, H)
+    hist_res_daily: jnp.ndarray       # (n, H)
+    hist_usage: jnp.ndarray           # (n, H, 24)
+    hist_res: jnp.ndarray             # (n, H, 24)
+    hist_tr_pred: jnp.ndarray         # (n, H)
+    hist_uif_pred: jnp.ndarray        # (n, H, 24)
+    carbon_hist: jnp.ndarray          # (z, H, 24)
+    queue: jnp.ndarray                # (n,) shaped-run backlog
+    cf_queue: jnp.ndarray             # (n,) counterfactual backlog
+    crowded_streak: jnp.ndarray       # (n,) int32
+    pause_left: jnp.ndarray           # (n,) int32
+    violation_days: jnp.ndarray       # (n,) int32
+    observed_days: jnp.ndarray        # (n,) int32
+    shaping_allowed: jnp.ndarray      # (n,) bool
+
+
+class StepOut(NamedTuple):
+    """Everything one day produces beyond the carried state. Consumers
+    keep what they need (the engine reduces to DayMetrics inside its scan
+    body; the legacy ``day_cycle`` records sol/vcc/result) — unused leaves
+    are dead-code-eliminated by XLA."""
+    res: admission.DayResult          # shaped admission result
+    cf: admission.DayResult           # unshaped counterfactual result
+    sol: vcc.VCCSolution
+    vcc_curve: jnp.ndarray            # (n, 24) post-SLO-gate VCC
+    fc: Dict[str, jnp.ndarray]        # forecast dict
+    prob: vcc.VCCProblem              # problem actually optimized
+    eta_act: jnp.ndarray              # (n, 24) actual intensity per cluster
+
+
+@dataclass(frozen=True)
+class StageConfig:
+    """Static knobs of the staged day cycle (hashable: keys the jit
+    cache). Shapes live in the state/params arrays, not here."""
+    slo_margin: float = 1.0
+    slo_pause_days: int = 7
+    spatial_iters: int = 100      # spatial pre-shift PGD iterations
+    use_pallas: Optional[bool] = None   # VCC PGD kernel dispatch (None=auto)
+    interpret: bool = False             # Pallas interpreter (CPU tests)
+
+
+def pd_truth(params: SimParams) -> power.PDTruth:
+    return power.PDTruth(idle_kw=params.pd_idle, slope_kw=params.pd_slope,
+                         curve=params.pd_curve)
+
+
+def roll(hist, new):
+    """Drop oldest day, append new. hist (n, H[, 24]); new (n[, 24])."""
+    return jnp.concatenate([hist[:, 1:], new[:, None]], axis=1)
+
+
+# ----------------------------------------------------------------- stages
+
+def carbon_stage(zone: Dict[str, jnp.ndarray], carbon_hist, key,
+                 green_scale, coal_scale):
+    """Draw one day of actual zone intensity + its day-ahead forecast.
+
+    zone: dict of (z,) grid-mix params; carbon_hist: (z, H, 24);
+    green/coal_scale: (z,) scenario multipliers. Returns barrier-pinned
+    (act_z (z, 24), fc_z (z, 24))."""
+    z = carbon_hist.shape[0]
+    zp = dict(zone)
+    zp["solar_cap"] = zp["solar_cap"] * green_scale
+    zp["wind_cap"] = zp["wind_cap"] * green_scale
+    zp["coal_share"] = zp["coal_share"] * coal_scale
+    keys = jax.random.split(key, 2 * z)
+    act_z = carbon.simulate_zones_from(keys[:z], zp, 1)[:, 0]     # (z, 24)
+    fc_z = jax.vmap(carbon.forecast_day_ahead)(
+        keys[z:], carbon_hist, act_z, zp["weather_vol"] * 0.15)
+    return jax.lax.optimization_barrier((act_z, fc_z))
+
+
+class PowerModel(NamedTuple):
+    """Fitted cluster power model as arrays (the power_stage output)."""
+    coef: jnp.ndarray       # (n*pds, K+2) piecewise-linear coefficients
+    breaks: jnp.ndarray     # (n*pds, K) hinge locations
+    lam: jnp.ndarray        # (n, pds) PD usage fractions
+    cap_pd: jnp.ndarray     # (n*pds,) cluster capacity per PD row
+
+
+def power_stage(hist_usage, lam, capacity, pdt: power.PDTruth, key
+                ) -> PowerModel:
+    """Fit PD piecewise power models on recent cluster usage history.
+
+    hist_usage: (n, hist, 24); lam: (n, pds); capacity: (n,);
+    pdt: power.PDTruth with (n*pds,) fields. jit/vmap-safe.
+    """
+    n, npd = lam.shape
+    u_cl = hist_usage[:, -28:].reshape(n, -1)                # (n, t)
+    u_pd = (lam[..., None] * u_cl[:, None, :]).reshape(n * npd, -1)
+    u_norm = u_pd / jnp.clip(
+        capacity[:, None, None].repeat(npd, 1).reshape(n * npd, 1),
+        1e-6, None)
+    p_pd = power.simulate_pd_power(key, pdt, u_norm)
+    coef, breaks = power.fit_pd_models(u_norm, p_pd)
+    # materialization point: keeps the fitted model's numerics independent
+    # of how downstream consumers fuse (bitwise batched/sequential parity)
+    coef, breaks = jax.lax.optimization_barrier((coef, breaks))
+    cap_pd = capacity[:, None].repeat(npd, 1).reshape(-1)
+    return PowerModel(coef=coef, breaks=breaks, lam=lam, cap_pd=cap_pd)
+
+
+def model_power(m: PowerModel, u_cluster):
+    """Cluster power at cluster CPU usage. (n,) -> (n,) kW."""
+    n, npd = m.lam.shape
+    u_pd_now = (m.lam * u_cluster[:, None]).reshape(-1)
+    u_n = u_pd_now / jnp.clip(m.cap_pd, 1e-6, None)
+    p = jax.vmap(power.pd_power)(m.coef, m.breaks, u_n[:, None])[:, 0]
+    return p.reshape(n, npd).sum(axis=1)
+
+
+def model_slope(m: PowerModel, u_cluster):
+    """Local cluster slope d kW / d cluster-CPU. (n,) -> (n,)."""
+    n, npd = m.lam.shape
+    u_pd_now = (m.lam * u_cluster[:, None]).reshape(-1)
+    u_n = u_pd_now / jnp.clip(m.cap_pd, 1e-6, None)
+    s = jax.vmap(power.pd_slope)(m.coef, m.breaks, u_n[:, None])[:, 0]
+    s = s / jnp.clip(m.cap_pd, 1e-6, None)
+    return (s.reshape(n, npd) * m.lam).sum(axis=1)
+
+
+def forecast_stage(hist_uif, hist_flex_daily, hist_res_daily, hist_usage,
+                   hist_res, hist_tr_pred, hist_uif_pred, day, gamma):
+    """Next-day forecasting pipeline from rolling history arrays.
+
+    All (n, hist[, 24]); day/gamma may be traced. Returns the
+    barrier-pinned forecast dict consumed by optimize_stage."""
+    n = hist_uif.shape[0]
+    dow = jnp.asarray(day % 7)
+    uif_pred = jax.vmap(lambda h: forecast.forecast_inflexible(h, dow))(
+        hist_uif)
+    tuf_pred = jax.vmap(lambda d: forecast.forecast_daily_total(d, dow))(
+        hist_flex_daily)
+    tr_pred = jax.vmap(lambda d: forecast.forecast_daily_total(d, dow))(
+        hist_res_daily)
+    ra, rb = jax.vmap(forecast.fit_ratio_model)(
+        hist_usage[:, -28:].reshape(n, -1),
+        hist_res[:, -28:].reshape(n, -1))
+    eps97 = jax.vmap(lambda p, a: forecast.relative_error_quantile(
+        p[-90:], a[-90:], 0.97))(hist_tr_pred, hist_res_daily)
+    theta = forecast.theta_requirement(tr_pred, eps97)
+    alpha = jax.vmap(forecast.alpha_inflation)(theta, uif_pred, tuf_pred,
+                                               ra, rb)
+    # (1-gamma) hourly inflexible quantile from trailing prediction errors
+    epsq = jax.vmap(lambda p, a: forecast.relative_error_quantile(
+        p[-28:].reshape(-1), a[-28:].reshape(-1), 1 - gamma))(
+        hist_uif_pred, hist_uif)
+    uif_q = uif_pred * (1.0 + jnp.clip(epsq, 0.0, 1.0)[:, None])
+    fc = {"uif": uif_pred, "tuf": tuf_pred, "tr": tr_pred,
+          "ratio_a": ra, "ratio_b": rb, "theta": theta, "alpha": alpha,
+          "uif_q": uif_q}
+    return jax.lax.optimization_barrier(fc)
+
+
+def build_problem_arrays(fc, eta_fc, power_fn, slope_fn, queue, u_pow_cap,
+                         capacity, campus, campus_limit, lambda_e, lambda_p
+                         ) -> vcc.VCCProblem:
+    """Assemble the fleetwide VCC problem from the forecast dict + carbon
+    forecast + structural arrays (risk-aware budget, eq. 3)."""
+    # risk-aware daily flexible budget (eq. 3) + carried-over queue
+    tau = fc["alpha"] * fc["tuf"] + queue
+    u_nom = fc["uif"] + tau[:, None] / 24.0
+    pow_nom = jax.vmap(power_fn, in_axes=1, out_axes=1)(u_nom)
+    pi = jax.vmap(slope_fn, in_axes=1, out_axes=1)(u_nom)
+    ratio = forecast.ratio_at(fc["ratio_a"][:, None], fc["ratio_b"][:, None],
+                              u_nom)
+    return vcc.VCCProblem(
+        eta=eta_fc, u_if=fc["uif"], u_if_q=fc["uif_q"], tau=tau,
+        pow_nom=pow_nom, pi=pi, u_pow_cap=u_pow_cap,
+        capacity=capacity, ratio=ratio, campus=campus,
+        campus_limit=campus_limit, lambda_e=lambda_e, lambda_p=lambda_p)
+
+
+def optimize_stage(cfg: StageConfig, fc, eta_fc, model: PowerModel, queue,
+                   u_pow_cap, cap_day, campus, campus_limit, lambda_e,
+                   lambda_p, mobility
+                   ) -> Tuple[vcc.VCCProblem, vcc.VCCSolution]:
+    """Fleetwide risk-aware VCC optimization (+ optional spatial pre-shift;
+    mobility == 0 collapses the shift to exactly zero). The PGD inner loop
+    dispatches through kernels.vcc_pgd per cfg.use_pallas/interpret."""
+    prob = build_problem_arrays(
+        fc, eta_fc,
+        lambda u: model_power(model, u), lambda u: model_slope(model, u),
+        queue, u_pow_cap, cap_day, campus, campus_limit, lambda_e, lambda_p)
+    prob = jax.lax.optimization_barrier(prob)
+    tau_shifted, _ = spatial.spatial_shift(prob, mobility=mobility,
+                                           iters=cfg.spatial_iters)
+    tau_shifted = jax.lax.optimization_barrier(tau_shifted)
+    prob = dataclasses.replace(prob, tau=tau_shifted)
+    sol = vcc.solve_vcc(prob, use_pallas=cfg.use_pallas,
+                        interpret=cfg.interpret)
+    return prob, sol
+
+
+def barrier_result(res: admission.DayResult) -> admission.DayResult:
+    """Pin a DayResult as an XLA materialization point. Without it, XLA
+    fuses admission outputs into downstream consumers, and the fusion plan
+    (hence float rounding) shifts with batch extent — breaking bitwise
+    batched-vs-sequential parity. Field order mirrors the dataclass."""
+    vals = jax.lax.optimization_barrier(
+        (res.usage_flex, res.usage_total, res.reservations, res.power,
+         res.carbon, res.served, res.arrived, res.queue_end, res.unmet))
+    return admission.DayResult(*vals)
+
+
+def observe_stage(truth, day, day_key, vcc_curve, cap_day, arr_scale,
+                  queue, cf_queue, power_fn, intensity):
+    """Sample the day's true load and run shaped + counterfactual
+    admission. Returns (shaped DayResult, counterfactual DayResult,
+    u_if, arrivals), results barrier-pinned."""
+    u_if = sample_inflexible(jax.random.fold_in(day_key, 2), truth, day)
+    u_if = jnp.minimum(u_if, 0.98 * cap_day[:, None])   # outage derates
+    arrivals = sample_arrivals(jax.random.fold_in(day_key, 3), truth, day)
+    arrivals = arrivals * arr_scale[:, None]
+    ratio_true = true_ratio(truth, u_if + arrivals)
+    # pin the sampled truth: its elementwise chain must not re-fuse (and
+    # re-round) differently between the scan body and other contexts
+    u_if, arrivals, ratio_true = jax.lax.optimization_barrier(
+        (u_if, arrivals, ratio_true))
+    res = admission.run_day(vcc_curve, u_if, arrivals, ratio_true, cap_day,
+                            queue, power_fn, intensity)
+    unshaped = jnp.broadcast_to(cap_day[:, None] * 10.0, vcc_curve.shape)
+    cf = admission.run_day(unshaped, u_if, arrivals, ratio_true, cap_day,
+                           cf_queue, power_fn, intensity)
+    return barrier_result(res), barrier_result(cf), u_if, arrivals
+
+
+def slo_stage(slo_state, slo_cfg: slo.SLOConfig, daily_reservations,
+              vcc_budget, unmet):
+    """End-of-day SLO feedback: returns (new slo_state, shaping_allowed
+    for the NEXT day)."""
+    return slo.update(slo_state, slo_cfg, daily_reservations, vcc_budget,
+                      unmet)
+
+
+# ------------------------------------------------------------- composition
+
+def make_day_step(cfg: StageConfig):
+    """One pure CICS day: forecast -> optimize -> shape -> observe -> SLO.
+
+    Returns step(params, state, xs) -> (state', StepOut) where xs holds
+    this day's scenario-schedule slices (all-ones = the paper's nominal
+    operation, which is what the legacy fleet path uses)."""
+    slo_cfg = slo.SLOConfig(margin=cfg.slo_margin,
+                            pause_days=cfg.slo_pause_days)
+
+    def step(params: SimParams, state: SimState, xs: Dict[str, jnp.ndarray]
+             ) -> Tuple[SimState, StepOut]:
+        day_key = jax.random.fold_in(params.key, state.day)
+        cap_day = jax.lax.optimization_barrier(
+            params.truth["capacity"] * xs["cap_scale"])
+        # 1-2. power pipeline + load forecasting on rolling history
+        model = power_stage(state.hist_usage, params.lam,
+                            params.truth["capacity"], pd_truth(params),
+                            jax.random.fold_in(day_key, 1))
+        fc = forecast_stage(
+            state.hist_uif, state.hist_flex_daily, state.hist_res_daily,
+            state.hist_usage, state.hist_res, state.hist_tr_pred,
+            state.hist_uif_pred, state.day, params.gamma)
+        # 3. carbon pipeline: scenario-perturbed grid, day-ahead forecast
+        act_z, fc_z = carbon_stage(params.zone, state.carbon_hist,
+                                   jax.random.fold_in(day_key, 4),
+                                   xs["green_scale"], xs["coal_scale"])
+        eta_act = act_z[state.zmap]
+        eta_fc = fc_z[state.zmap]
+        # 4. fleetwide risk-aware VCC optimization (+ spatial pre-shift)
+        prob, sol = optimize_stage(
+            cfg, fc, eta_fc, model, state.queue,
+            state.u_pow_cap * xs["cap_scale"], cap_day, state.campus,
+            state.campus_limit * xs["campus_scale"],
+            params.lambda_e, params.lambda_p, params.mobility)
+        # 5. SLO gate: paused clusters get VCC = machine capacity
+        gate = state.shaping_allowed & sol.shaped
+        vcc_curve = jnp.where(gate[:, None], sol.vcc, cap_day[:, None] * 10.0)
+        vcc_curve = jax.lax.optimization_barrier(vcc_curve)
+        # record predictions for trailing-error quantiles
+        hist_tr_pred = roll(state.hist_tr_pred, fc["tr"])
+        hist_uif_pred = roll(state.hist_uif_pred, fc["uif"])
+        # 6. real time: admission on ACTUAL load (+ counterfactual)
+        res, cf, u_if, _ = observe_stage(
+            params.truth, state.day, day_key, vcc_curve, cap_day,
+            xs["arrival_scale"], state.queue, state.cf_queue,
+            lambda u: model_power(model, u), eta_act)
+        # 7. telemetry + SLO feedback
+        slo_state = {"crowded_streak": state.crowded_streak,
+                     "pause_left": state.pause_left,
+                     "violation_days": state.violation_days,
+                     "observed_days": state.observed_days}
+        new_slo, allowed = slo_stage(slo_state, slo_cfg,
+                                     hour_sum(res.reservations),
+                                     hour_sum(vcc_curve), res.unmet)
+        new_state = state._replace(
+            day=state.day + 1,
+            hist_uif=roll(state.hist_uif, u_if),
+            hist_flex_daily=roll(state.hist_flex_daily, res.served),
+            hist_res_daily=roll(state.hist_res_daily,
+                                hour_sum(res.reservations)),
+            hist_usage=roll(state.hist_usage, res.usage_total),
+            hist_res=roll(state.hist_res, res.reservations),
+            hist_tr_pred=hist_tr_pred,
+            hist_uif_pred=hist_uif_pred,
+            carbon_hist=roll(state.carbon_hist, act_z),
+            queue=res.queue_end,
+            cf_queue=cf.queue_end,
+            crowded_streak=new_slo["crowded_streak"],
+            pause_left=new_slo["pause_left"],
+            violation_days=new_slo["violation_days"],
+            observed_days=new_slo["observed_days"],
+            shaping_allowed=allowed,
+        )
+        return new_state, StepOut(res=res, cf=cf, sol=sol,
+                                  vcc_curve=vcc_curve, fc=fc, prob=prob,
+                                  eta_act=eta_act)
+
+    return step
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_day_step(cfg: StageConfig):
+    """The SAME jitted executable for every standalone driver of the day
+    cycle (legacy fleet.day_cycle, sequential debugging, parity tests) —
+    one compile per StageConfig, bitwise-identical results across callers."""
+    return jax.jit(make_day_step(cfg))
+
+
+def ones_xs(n_clusters: int, n_campuses: int, n_zones: int
+            ) -> Dict[str, jnp.ndarray]:
+    """Neutral (nominal-operation) scenario slices for one day."""
+    return {"green_scale": jnp.ones((n_zones,), f32),
+            "coal_scale": jnp.ones((n_zones,), f32),
+            "cap_scale": jnp.ones((n_clusters,), f32),
+            "arrival_scale": jnp.ones((n_clusters,), f32),
+            "campus_scale": jnp.ones((n_campuses,), f32)}
+
+
+# ------------------------------------------------------------ init/burn-in
+
+def burnin_step(params: SimParams, state: SimState) -> SimState:
+    """One unshaped day with the cheap linear power proxy (history fill)."""
+    day_key = jax.random.fold_in(params.key, state.day)
+    cap = params.truth["capacity"]
+
+    def proxy_power(u):
+        return 100.0 + 300.0 * u
+
+    act_z, _ = carbon_stage(params.zone, state.carbon_hist,
+                            jax.random.fold_in(day_key, 4),
+                            jnp.ones_like(params.zone["solar_cap"]),
+                            jnp.ones_like(params.zone["solar_cap"]))
+    unshaped = jnp.broadcast_to(cap[:, None] * 10.0, (cap.shape[0], 24))
+    res, _, u_if, _ = observe_stage(
+        params.truth, state.day, day_key, unshaped, cap,
+        jnp.ones_like(cap), state.queue, state.queue, proxy_power,
+        act_z[state.zmap])
+    return state._replace(
+        day=state.day + 1,
+        hist_uif=roll(state.hist_uif, u_if),
+        hist_flex_daily=roll(state.hist_flex_daily, res.served),
+        hist_res_daily=roll(state.hist_res_daily,
+                            hour_sum(res.reservations)),
+        hist_usage=roll(state.hist_usage, res.usage_total),
+        hist_res=roll(state.hist_res, res.reservations),
+        carbon_hist=roll(state.carbon_hist, act_z),
+        queue=res.queue_end,
+        cf_queue=res.queue_end,
+    )
+
+
+def make_init(n_clusters: int, n_campuses: int, n_zones: int,
+              hist_days: int):
+    """init(params) -> burned-in SimState. jit- and vmap-compatible: the
+    hist_days burn-in runs under lax.scan (one dispatch, not hundreds)."""
+    n, m, z, H = n_clusters, n_campuses, n_zones, hist_days
+    campus_np = [i % m for i in range(n)]
+    zmap_np = [(c % z) for c in campus_np]
+
+    def init(params: SimParams) -> SimState:
+        cap = params.truth["capacity"]
+        state = SimState(
+            day=jnp.zeros((), jnp.int32),
+            campus=jnp.asarray(campus_np, jnp.int32),
+            zmap=jnp.asarray(zmap_np, jnp.int32),
+            campus_limit=jnp.zeros((m,), f32),
+            u_pow_cap=cap * 0.95,
+            hist_uif=jnp.zeros((n, H, 24), f32),
+            hist_flex_daily=jnp.zeros((n, H), f32),
+            hist_res_daily=jnp.zeros((n, H), f32),
+            hist_usage=jnp.zeros((n, H, 24), f32),
+            hist_res=jnp.zeros((n, H, 24), f32),
+            hist_tr_pred=jnp.zeros((n, H), f32),
+            hist_uif_pred=jnp.zeros((n, H, 24), f32),
+            carbon_hist=jnp.zeros((z, H, 24), f32),
+            queue=jnp.zeros((n,), f32),
+            cf_queue=jnp.zeros((n,), f32),
+            crowded_streak=jnp.zeros((n,), jnp.int32),
+            pause_left=jnp.zeros((n,), jnp.int32),
+            violation_days=jnp.zeros((n,), jnp.int32),
+            observed_days=jnp.zeros((n,), jnp.int32),
+            shaping_allowed=jnp.ones((n,), bool),
+        )
+
+        def burn(s, _):
+            return burnin_step(params, s), None
+
+        state, _ = jax.lax.scan(burn, state, None, length=H)
+        # zero-error prediction prior; honest quantiles build up in-horizon
+        state = state._replace(hist_tr_pred=state.hist_res_daily,
+                               hist_uif_pred=state.hist_uif)
+        # campus contracts: 97% of fitted-model campus peak over last week
+        model = power_stage(state.hist_usage, params.lam, cap,
+                            pd_truth(params),
+                            jax.random.fold_in(params.key, 999))
+        upow = jax.vmap(lambda u: model_power(model, u),
+                        in_axes=1, out_axes=1)(
+            state.hist_usage[:, -7:].reshape(n, -1))
+        peak = upow.max(axis=1)
+        limit = jax.ops.segment_sum(peak, state.campus,
+                                    num_segments=m) * 0.97
+        state = state._replace(campus_limit=limit.astype(f32))
+        # materialize: burned-in state must not fuse into rollout consumers
+        # (jit(init + rollout) would otherwise drift vs separate calls)
+        return jax.lax.optimization_barrier(state)
+
+    return init

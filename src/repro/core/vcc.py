@@ -30,6 +30,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.vcc_pgd import ref as _pgd_ref
+
 f32 = jnp.float32
 
 
@@ -97,21 +99,9 @@ def delta_bounds(p: VCCProblem):
 
 def project_conservation(z, lo, ub, iters: int = 50):
     """Euclidean projection of each row onto {sum=0} ∩ [lo, ub] via
-    bisection on the shift nu: sum(clip(z - nu, lo, ub)) = 0."""
-    nu_min = jnp.min(z, 1) - jnp.max(ub, 1)          # f(nu_min) = sum ub >= 0
-    nu_max = jnp.max(z, 1) - jnp.min(lo, 1)          # f(nu_max) = sum lo <= 0
-
-    def body(i, carry):
-        a, b = carry
-        m = 0.5 * (a + b)
-        f = jnp.sum(jnp.clip(z - m[:, None], lo, ub), axis=1)
-        a = jnp.where(f > 0, m, a)
-        b = jnp.where(f > 0, b, m)
-        return a, b
-
-    a, b = jax.lax.fori_loop(0, iters, body, (nu_min, nu_max))
-    nu = 0.5 * (a + b)
-    return jnp.clip(z - nu[:, None], lo, ub)
+    bisection on the shift nu: sum(clip(z - nu, lo, ub)) = 0. Single
+    implementation lives in the kernel package's jnp oracle."""
+    return _pgd_ref.project_row(z, lo, ub, iters)
 
 
 def cluster_power(p: VCCProblem, delta):
@@ -134,18 +124,27 @@ def objective(p: VCCProblem, delta, mu):
 
 
 def pgd_step(p: VCCProblem, delta, mu, lo, ub, lr, temp):
-    """One projected-gradient step (the Pallas-kernelized hotspot)."""
+    """One projected-gradient step (the Pallas-kernelized hotspot).
+    Thin adapter over the kernel package's shared step — the same math the
+    Pallas kernel fuses in VMEM (no second jnp copy of the inner body)."""
     tau24 = p.tau[:, None] / 24.0
-    pow_h = cluster_power(p, delta)
-    _, w = smooth_peak(pow_h, temp)
     peak_price = (p.lambda_p + mu[p.campus])[:, None]
-    grad = (p.lambda_e * p.eta + peak_price * w) * p.pi * tau24
-    return project_conservation(delta - lr * grad, lo, ub)
+    return _pgd_ref.pgd_step_arrays(delta, p.eta, p.pi, p.pow_nom, tau24,
+                                    peak_price, lo, ub, lr, temp,
+                                    p.lambda_e)
 
 
 def solve_vcc(p: VCCProblem, *, inner_iters: int = 80, outer_iters: int = 20,
               lr: float = 0.5, temp_frac: float = 0.02, rho: float = 0.2,
-              use_pallas: Optional[bool] = None) -> VCCSolution:
+              use_pallas: Optional[bool] = None,
+              interpret: bool = False) -> VCCSolution:
+    """Solve the fleetwide VCC problem (eq. 4).
+
+    The inner PGD epoch dispatches through ``kernels.vcc_pgd.ops.pgd_epoch``
+    with the fleet-wide kernel convention: ``use_pallas=None`` auto-selects
+    the Pallas kernel on TPU and the jnp oracle elsewhere; ``interpret=True``
+    exercises the kernel through the Pallas interpreter on CPU (tests).
+    """
     n, H = p.eta.shape
     lo, ub, feasible = delta_bounds(p)
     # neutralize infeasible clusters: bounds collapse to {0}
@@ -161,24 +160,11 @@ def solve_vcc(p: VCCProblem, *, inner_iters: int = 80, outer_iters: int = 20,
         p.lambda_e * p.eta.max(axis=1, keepdims=True) + p.lambda_p, 1e-9,
         None))
 
-    if use_pallas is None:
-        use_pallas = False
-    if use_pallas:
-        from repro.kernels.vcc_pgd import ops as _k
+    from repro.kernels.vcc_pgd import ops as _k
 
-        def inner(delta, mu):
-            return _k.pgd_epoch(p, delta, mu, lo, ub, lr_eff, temp,
-                                inner_iters)
-    else:
-        def inner(delta, mu):
-            def body(i, d):
-                tau24 = p.tau[:, None] / 24.0
-                pow_h = cluster_power(p, d)
-                _, w = smooth_peak(pow_h, temp)
-                peak_price = (p.lambda_p + mu[p.campus])[:, None]
-                grad = (p.lambda_e * p.eta + peak_price * w) * p.pi * tau24
-                return project_conservation(d - lr_eff * grad, lo, ub)
-            return jax.lax.fori_loop(0, inner_iters, body, delta)
+    def inner(delta, mu):
+        return _k.pgd_epoch(p, delta, mu, lo, ub, lr_eff, temp, inner_iters,
+                            use_pallas=use_pallas, interpret=interpret)
 
     def outer(carry, _):
         delta, mu = carry

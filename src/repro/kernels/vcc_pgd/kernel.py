@@ -9,6 +9,10 @@ optimizer calls this once per dual-ascent round for the whole fleet
 (~O(100k) clusters x 24 h), so HBM round-trips per PGD iteration are the
 hotspot being removed.
 
+``temp`` and ``lambda_e`` ride in as broadcast (n, 1) operands rather than
+compile-time constants: the day cycle derives ``temp`` from the problem
+inside jit, so they may be traced scalars.
+
 Validated with interpret=True against ref.pgd_epoch_ref.
 """
 from __future__ import annotations
@@ -23,8 +27,8 @@ DEFAULT_TILE = 256
 
 
 def _pgd_kernel(delta_ref, eta_ref, pi_ref, pow_ref, tau_ref, price_ref,
-                lo_ref, ub_ref, lr_ref, out_ref, *, temp, lambda_e, iters,
-                proj_iters):
+                lo_ref, ub_ref, lr_ref, temp_ref, lame_ref, out_ref, *,
+                iters, proj_iters):
     delta = delta_ref[...].astype(jnp.float32)
     eta = eta_ref[...].astype(jnp.float32)
     pi = pi_ref[...].astype(jnp.float32)
@@ -34,6 +38,8 @@ def _pgd_kernel(delta_ref, eta_ref, pi_ref, pow_ref, tau_ref, price_ref,
     lo = lo_ref[...].astype(jnp.float32)
     ub = ub_ref[...].astype(jnp.float32)
     lr = lr_ref[...].astype(jnp.float32)
+    temp = temp_ref[...].astype(jnp.float32)          # (TC, 1) broadcast
+    lambda_e = lame_ref[...].astype(jnp.float32)      # (TC, 1) broadcast
 
     def project(z):
         a = jnp.min(z, 1) - jnp.max(ub, 1)
@@ -65,10 +71,10 @@ def _pgd_kernel(delta_ref, eta_ref, pi_ref, pow_ref, tau_ref, price_ref,
 
 
 def pgd_epoch_pallas(delta, eta, pi, pow_nom, tau24, price, lo, ub, lr, *,
-                     temp: float, lambda_e: float, iters: int,
-                     proj_iters: int = 50, tile: int = DEFAULT_TILE,
-                     interpret: bool = False):
-    """All matrices (n, H); tau24/price/lr (n, 1). Returns new delta."""
+                     temp, lambda_e, iters: int, proj_iters: int = 50,
+                     tile: int = DEFAULT_TILE, interpret: bool = False):
+    """All matrices (n, H); tau24/price/lr (n, 1); temp/lambda_e scalar
+    (float or traced). Returns new delta."""
     n, H = delta.shape
     tile = min(tile, n)
     pad = (-n) % tile
@@ -76,17 +82,22 @@ def pgd_epoch_pallas(delta, eta, pi, pow_nom, tau24, price, lo, ub, lr, *,
     def p2(x):
         return jnp.pad(x, ((0, pad), (0, 0)))
 
+    temp_a = jnp.broadcast_to(jnp.asarray(temp, jnp.float32), (n, 1))
+    lame_a = jnp.broadcast_to(jnp.asarray(lambda_e, jnp.float32), (n, 1))
+    # pad temp with ones: the body divides by it in dead padded rows
+    temp_a = jnp.pad(temp_a, ((0, pad), (0, 0)), constant_values=1.0)
     args = [p2(x) for x in (delta, eta, pi, pow_nom, tau24, price, lo, ub,
-                            lr)]
+                            lr)] + [temp_a, p2(lame_a)]
     nt = (n + pad) // tile
-    kernel = functools.partial(_pgd_kernel, temp=temp, lambda_e=lambda_e,
-                               iters=iters, proj_iters=proj_iters)
+    kernel = functools.partial(_pgd_kernel, iters=iters,
+                               proj_iters=proj_iters)
     wide = pl.BlockSpec((tile, H), lambda i: (i, 0))
     slim = pl.BlockSpec((tile, 1), lambda i: (i, 0))
     out = pl.pallas_call(
         kernel,
         grid=(nt,),
-        in_specs=[wide, wide, wide, wide, slim, slim, wide, wide, slim],
+        in_specs=[wide, wide, wide, wide, slim, slim, wide, wide, slim,
+                  slim, slim],
         out_specs=wide,
         out_shape=jax.ShapeDtypeStruct((n + pad, H), delta.dtype),
         interpret=interpret,

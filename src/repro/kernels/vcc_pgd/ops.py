@@ -1,4 +1,11 @@
-"""Dispatching wrapper for the fused VCC PGD epoch."""
+"""Dispatching wrapper for the fused VCC PGD epoch.
+
+Same convention as the other kernel packages (``flash_attention``,
+``linear_scan``): ``use_pallas=None`` auto-selects the Pallas kernel on TPU
+and the jnp oracle elsewhere; ``interpret=True`` forces the kernel through
+the Pallas interpreter (CPU parity tests). ``core.vcc.solve_vcc`` routes its
+inner loop here for BOTH the legacy fleet path and the sim engine.
+"""
 from __future__ import annotations
 
 from typing import Optional
@@ -18,14 +25,17 @@ def _tpu_available() -> bool:
 
 def pgd_epoch(prob, delta, mu, lo, ub, lr_eff, temp, iters,
               use_pallas: Optional[bool] = None, interpret: bool = False):
-    """Adapter from a repro.core.vcc.VCCProblem to the kernel layout."""
+    """Adapter from a repro.core.vcc.VCCProblem to the kernel layout.
+
+    ``temp`` and ``prob.lambda_e`` may be traced scalars (the day cycle
+    computes temp from the problem inside jit/vmap).
+    """
     tau24 = (prob.tau[:, None] / 24.0).astype(jnp.float32)
     price = (prob.lambda_p + mu[prob.campus])[:, None].astype(jnp.float32)
     lr = jnp.broadcast_to(jnp.asarray(lr_eff, jnp.float32),
                           (delta.shape[0], 1)) \
         if jnp.ndim(lr_eff) < 2 else lr_eff.astype(jnp.float32)
-    kw = dict(temp=float(temp), lambda_e=float(prob.lambda_e),
-              iters=int(iters))
+    kw = dict(temp=temp, lambda_e=prob.lambda_e, iters=int(iters))
     if use_pallas is None:
         use_pallas = _tpu_available()
     if use_pallas or interpret:

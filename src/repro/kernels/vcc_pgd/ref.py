@@ -2,8 +2,11 @@
 
 One epoch = ``iters`` iterations of [linearized-objective gradient →
 exact bisection projection onto {sum_h delta = 0} ∩ [lo, ub]] for a tile of
-clusters. This is the math executed per day for every cluster fleetwide;
-the Pallas kernel keeps the whole epoch in VMEM.
+clusters. This module is the SINGLE implementation of that math:
+``core.vcc`` delegates its ``project_conservation`` / ``pgd_step`` to
+``project_row`` / ``pgd_step_arrays``, and the Pallas kernel mirrors the
+same ops in VMEM. ``temp`` / ``lambda_e`` may be Python floats or traced
+scalars (the day-cycle computes ``temp`` from the problem inside jit).
 """
 from __future__ import annotations
 
@@ -14,7 +17,9 @@ f32 = jnp.float32
 
 
 def project_row(z, lo, ub, iters: int = 50):
-    """Bisection projection, rows independent. z/lo/ub: (n, H)."""
+    """Bisection projection onto {sum_h = 0} ∩ [lo, ub], rows independent.
+    z/lo/ub: (n, H). Elementwise + ordered ops only: bitwise batch-invariant
+    (the sim engine's batched==sequential parity contract rides on this)."""
     a = jnp.min(z, 1) - jnp.max(ub, 1)
     b = jnp.max(z, 1) - jnp.min(lo, 1)
 
@@ -31,15 +36,26 @@ def project_row(z, lo, ub, iters: int = 50):
     return jnp.clip(z - nu[:, None], lo, ub)
 
 
+def pgd_step_arrays(d, eta, pi, pow_nom, tau24, price, lo, ub, lr,
+                    temp, lambda_e, proj_iters: int = 50):
+    """One projected-gradient step in the kernel's array layout.
+
+    d/eta/pi/pow_nom/lo/ub: (n, H); tau24/price/lr: (n, 1); temp/lambda_e:
+    scalars (possibly traced). The linearized carbon + softmax-peak gradient
+    followed by the exact conservation projection.
+    """
+    pow_h = pow_nom + pi * d * tau24
+    w = jax.nn.softmax(pow_h / temp, axis=1)
+    grad = (lambda_e * eta + price * w) * pi * tau24
+    return project_row(d - lr * grad, lo, ub, proj_iters)
+
+
 def pgd_epoch_ref(delta, eta, pi, pow_nom, tau24, price, lo, ub, lr,
-                  *, temp: float, lambda_e: float, iters: int,
-                  proj_iters: int = 50):
+                  *, temp, lambda_e, iters: int, proj_iters: int = 50):
     """delta/eta/pi/pow_nom/lo/ub: (n, H); tau24/price/lr: (n, 1)."""
 
     def body(i, d):
-        pow_h = pow_nom + pi * d * tau24
-        w = jax.nn.softmax(pow_h / temp, axis=1)
-        grad = (lambda_e * eta + price * w) * pi * tau24
-        return project_row(d - lr * grad, lo, ub, proj_iters)
+        return pgd_step_arrays(d, eta, pi, pow_nom, tau24, price, lo, ub,
+                               lr, temp, lambda_e, proj_iters)
 
     return jax.lax.fori_loop(0, iters, body, delta)

@@ -40,6 +40,33 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, devices=devices)
 
 
+def make_batch_mesh(n_devices=None):
+    """1-D mesh over local devices with a single "batch" axis.
+
+    The sim engine shards its (scenario x seed) rollout batch over this
+    axis (`engine.rollout_batch_sharded`): rollouts are embarrassingly
+    parallel, so a flat device line is the right topology. With one device
+    (CPU tests) this degenerates to a 1-mesh — same code path, no-op
+    sharding.
+    """
+    devices = jax.devices()
+    n = len(devices) if n_devices is None else int(n_devices)
+    if n < 1 or n > len(devices):
+        raise ValueError(f"need 1..{len(devices)} devices, asked for {n}")
+    return jax.make_mesh((n,), ("batch",), devices=devices[:n])
+
+
+def shard_map_compat(fn, mesh, in_specs, out_specs):
+    """shard_map across JAX versions (`jax.shard_map` landed after 0.4.x;
+    older releases ship it under jax.experimental)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs)
+
+
 def make_local_mesh(model_parallel: int = 1):
     """Tiny mesh over whatever devices exist (tests / examples)."""
     n = len(jax.devices())

@@ -9,7 +9,7 @@ emissions ledger with an unshaped counterfactual run in the same batch
 """
 from repro.sim.engine import (SimConfig, SimParams, SimState, make_init,
                               make_day_step, make_rollout, rollout_batch,
-                              rollout_sequential)
+                              rollout_batch_sharded, rollout_sequential)
 from repro.sim.ledger import Ledger, init_ledger, ledger_update, summarize
 from repro.sim.scenarios import (Scenario, build_params, build_batch,
                                  default_library)
@@ -17,7 +17,8 @@ from repro.sim.report import scenario_rows, format_table
 
 __all__ = [
     "SimConfig", "SimParams", "SimState", "make_init", "make_day_step",
-    "make_rollout", "rollout_batch", "rollout_sequential",
+    "make_rollout", "rollout_batch", "rollout_batch_sharded",
+    "rollout_sequential",
     "Ledger", "init_ledger", "ledger_update", "summarize",
     "Scenario", "build_params", "build_batch", "default_library",
     "scenario_rows", "format_table",

@@ -1,66 +1,46 @@
-"""Batched fleet rollout engine.
+"""Batched fleet rollout engine: scan/vmap/shard_map over the staged core.
 
-The legacy day cycle in `core/fleet.py` steps a Python loop over a mutable
-dataclass, so one fleet-day costs hundreds of eager dispatches and nothing
-batches. This engine re-expresses the SAME pipeline (forecast -> optimize ->
-shape -> observe -> SLO feedback, built from the pure array functions now
-exposed by core/) as:
+The CICS day cycle itself lives in ``repro.core.stages`` (pure stage
+functions composed by ``stages.make_day_step``); this module owns only the
+ROLLOUT machinery around it:
 
-  * `SimState` / `SimParams` — flat pytrees of arrays only. No configs,
-    no Python objects: everything a scenario perturbs is an array leaf.
-  * `make_day_step(cfg)`   — one pure, jit-compiled CICS day.
-  * `make_rollout(cfg, d)` — `lax.scan` of the day step, carrying an
-    emissions ledger and advancing an UNSHAPED counterfactual fleet
+  * `SimConfig`            — static shapes + solver knobs. Everything
+    dynamic (prices, risk, weather, outages) lives in `SimParams` arrays.
+  * `make_day_step(cfg)`   — the staged day, returning (state', StepOut).
+  * `make_init(cfg)`       — `lax.scan` burn-in -> SimState (jit/vmap-safe).
+  * `make_rollout(cfg, d)` — `lax.scan` of the day step over days, carrying
+    an emissions ledger and advancing an UNSHAPED counterfactual fleet
     (identical arrivals, VCC = machine capacity) in the same trace.
-  * `rollout_batch`        — `jax.vmap` of the rollout across a leading
-    (scenario x seed) axis of stacked SimParams/SimState.
+  * `rollout_batch`        — `jax.vmap` of (init + rollout) across a
+    leading (scenario x seed) axis of stacked SimParams.
+  * `rollout_batch_sharded`— the same batch `shard_map`'d over a 1-D
+    device mesh (`launch.mesh.make_batch_mesh`): scenario batches scale
+    across every accelerator on the host/pod, one shard per device group.
 
 Parity contract (tested): a vmap'd batch reproduces each scenario's
-non-batched sequential rollout BITWISE, for any batch size. This needs
-batch-invariant numerics — ordered reductions for daily totals
-(`admission.hour_sum`, `_hsum`), the elementwise `power._solve_spd` /
-`power.pd_power`, and `optimization_barrier` materialization points at
-stage boundaries so XLA cannot re-fuse (and re-round) a producer when its
-consumers change. `rollout_sequential` additionally drives the same jitted
-day step from a Python loop — a debugging reference that agrees to float
-tolerance (standalone-vs-scan-body compilation may differ in FMA choices).
+non-batched sequential rollout BITWISE, for any batch size — and the
+sharded batch reproduces the unsharded batch bitwise, for any device
+count that divides it. This needs batch-invariant numerics — ordered
+reductions for daily totals (`admission.hour_sum`), the elementwise
+`power._solve_spd` / `power.pd_power`, and the `optimization_barrier`
+pins at every stage boundary in `stages` so XLA cannot re-fuse (and
+re-round) a producer when its consumers change. `rollout_sequential`
+additionally drives the same jitted day step from a Python loop — a
+debugging reference that agrees to float tolerance (standalone-vs-scan-
+body compilation may differ in FMA choices).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Dict, NamedTuple, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import admission, carbon, fleet, power, slo, spatial, vcc
+from repro.core import stages
+from repro.core.stages import (SimParams, SimState,    # noqa: F401
+                               StepOut, hour_sum as _hsum)
 from repro.sim.ledger import DayMetrics, init_ledger, ledger_update
-
-f32 = jnp.float32
-
-
-def _register_barrier_batching():
-    """jax<=0.4 ships no vmap rule for optimization_barrier (newer jax
-    does). The rule is the identity on batch dims: barrier each operand,
-    keep its batch axis."""
-    try:
-        from jax._src.interpreters import batching
-        from jax._src.lax import lax as _lax
-        prim = _lax.optimization_barrier_p
-    except (ImportError, AttributeError):    # pragma: no cover
-        return
-    if prim in batching.primitive_batchers:
-        return
-
-    def rule(args, dims):
-        return prim.bind(*args), dims
-
-    batching.primitive_batchers[prim] = rule
-
-
-_register_barrier_batching()
 
 
 @dataclass(frozen=True)
@@ -76,115 +56,10 @@ class SimConfig:
     slo_pause_days: int = 7
     spatial_iters: int = 100      # spatial pre-shift PGD iterations
 
-
-class SimParams(NamedTuple):
-    """Per-rollout scenario parameters. All leaves are arrays; stacking a
-    list of SimParams along axis 0 gives the (scenario x seed) batch."""
-    key: jnp.ndarray                  # PRNG key data, (2,) uint32
-    truth: Dict[str, jnp.ndarray]     # latent cluster processes, (n,)
-    pd_idle: jnp.ndarray              # (n*pds,)
-    pd_slope: jnp.ndarray             # (n*pds,)
-    pd_curve: jnp.ndarray             # (n*pds,)
-    lam: jnp.ndarray                  # (n, pds) PD usage fractions
-    zone: Dict[str, jnp.ndarray]      # grid-mix params, (z,)
-    lambda_e: jnp.ndarray             # () carbon price
-    lambda_p: jnp.ndarray             # () peak-power price
-    gamma: jnp.ndarray                # () power-capping violation prob
-    mobility: jnp.ndarray             # () spatial-shift mobility (0 = off)
-    green_scale: jnp.ndarray          # (days, z) solar+wind multiplier
-    coal_scale: jnp.ndarray           # (days, z) coal-share multiplier
-    cap_scale: jnp.ndarray            # (days, n) capacity multiplier
-    arrival_scale: jnp.ndarray        # (days, n) flexible-demand multiplier
-    campus_scale: jnp.ndarray         # (days, m) campus power-limit scale
-
-
-class SimState(NamedTuple):
-    """Array-only rollout state (the scan carry)."""
-    day: jnp.ndarray                  # () int32
-    campus: jnp.ndarray               # (n,) int32
-    zmap: jnp.ndarray                 # (n,) int32 zone of cluster
-    campus_limit: jnp.ndarray         # (m,) kW
-    u_pow_cap: jnp.ndarray            # (n,)
-    hist_uif: jnp.ndarray             # (n, H, 24)
-    hist_flex_daily: jnp.ndarray      # (n, H)
-    hist_res_daily: jnp.ndarray       # (n, H)
-    hist_usage: jnp.ndarray           # (n, H, 24)
-    hist_res: jnp.ndarray             # (n, H, 24)
-    hist_tr_pred: jnp.ndarray         # (n, H)
-    hist_uif_pred: jnp.ndarray        # (n, H, 24)
-    carbon_hist: jnp.ndarray          # (z, H, 24)
-    queue: jnp.ndarray                # (n,) shaped-run backlog
-    cf_queue: jnp.ndarray             # (n,) counterfactual backlog
-    crowded_streak: jnp.ndarray       # (n,) int32
-    pause_left: jnp.ndarray           # (n,) int32
-    violation_days: jnp.ndarray       # (n,) int32
-    observed_days: jnp.ndarray        # (n,) int32
-    shaping_allowed: jnp.ndarray      # (n,) bool
-
-
-def _pd_truth(params: SimParams) -> power.PDTruth:
-    return power.PDTruth(idle_kw=params.pd_idle, slope_kw=params.pd_slope,
-                         curve=params.pd_curve)
-
-
-def _roll(hist, new):
-    """Drop oldest day, append new. hist (n, H[, 24]); new (n[, 24])."""
-    return jnp.concatenate([hist[:, 1:], new[:, None]], axis=1)
-
-
-def _zone_day(params: SimParams, state: SimState, key, green_scale,
-              coal_scale):
-    """Draw one day of actual zone intensity + its day-ahead forecast."""
-    z = state.carbon_hist.shape[0]
-    zp = dict(params.zone)
-    zp["solar_cap"] = zp["solar_cap"] * green_scale
-    zp["wind_cap"] = zp["wind_cap"] * green_scale
-    zp["coal_share"] = zp["coal_share"] * coal_scale
-    keys = jax.random.split(key, 2 * z)
-    act_z = carbon.simulate_zones_from(keys[:z], zp, 1)[:, 0]     # (z, 24)
-    fc_z = jax.vmap(carbon.forecast_day_ahead)(
-        keys[z:], state.carbon_hist, act_z, zp["weather_vol"] * 0.15)
-    return act_z, fc_z
-
-
-def _observe(params: SimParams, state: SimState, day_key,
-             vcc_curve, cap_day, arr_scale, power_fn, intensity):
-    """Sample the day's true load and run shaped + counterfactual
-    admission. Returns (shaped DayResult, counterfactual DayResult,
-    u_if, arrivals)."""
-    u_if = fleet._sample_inflexible(jax.random.fold_in(day_key, 2),
-                                    params.truth, state.day)
-    u_if = jnp.minimum(u_if, 0.98 * cap_day[:, None])   # outage derates
-    arrivals = fleet._sample_arrivals(jax.random.fold_in(day_key, 3),
-                                      params.truth, state.day)
-    arrivals = arrivals * arr_scale[:, None]
-    ratio_true = fleet._true_ratio(params.truth, u_if + arrivals)
-    # pin the sampled truth: its elementwise chain must not re-fuse (and
-    # re-round) differently between the scan body and other contexts
-    u_if, arrivals, ratio_true = jax.lax.optimization_barrier(
-        (u_if, arrivals, ratio_true))
-    res = admission.run_day(vcc_curve, u_if, arrivals, ratio_true, cap_day,
-                            state.queue, power_fn, intensity)
-    unshaped = jnp.broadcast_to(cap_day[:, None] * 10.0, vcc_curve.shape)
-    cf = admission.run_day(unshaped, u_if, arrivals, ratio_true, cap_day,
-                           state.cf_queue, power_fn, intensity)
-    return _barrier_result(res), _barrier_result(cf), u_if, arrivals
-
-
-# ordered sum over the last axis: the batch-invariant reduction primitive
-# (single definition — the parity contract depends on these staying one op)
-_hsum = admission.hour_sum
-
-
-def _barrier_result(res: admission.DayResult) -> admission.DayResult:
-    """Pin a DayResult as an XLA materialization point. Without it, XLA
-    fuses admission outputs into downstream consumers, and the fusion plan
-    (hence float rounding) shifts with batch extent — breaking bitwise
-    batched-vs-sequential parity. Field order mirrors the dataclass."""
-    vals = jax.lax.optimization_barrier(
-        (res.usage_flex, res.usage_total, res.reservations, res.power,
-         res.carbon, res.served, res.arrived, res.queue_end, res.unmet))
-    return admission.DayResult(*vals)
+    def stage_config(self) -> stages.StageConfig:
+        return stages.StageConfig(slo_margin=self.slo_margin,
+                                  slo_pause_days=self.slo_pause_days,
+                                  spatial_iters=self.spatial_iters)
 
 
 def _metrics(res, cf) -> DayMetrics:
@@ -198,183 +73,15 @@ def _metrics(res, cf) -> DayMetrics:
 
 
 def make_day_step(cfg: SimConfig):
-    """One pure CICS day: forecast -> optimize -> shape -> observe -> SLO.
-
-    Returns step(params, state, xs) -> (state', DayMetrics) where xs holds
-    this day's scenario-schedule slices."""
-    slo_cfg = slo.SLOConfig(margin=cfg.slo_margin,
-                            pause_days=cfg.slo_pause_days)
-
-    def step(params: SimParams, state: SimState, xs: Dict[str, jnp.ndarray]
-             ) -> Tuple[SimState, DayMetrics]:
-        day_key = jax.random.fold_in(params.key, state.day)
-        cap_day = jax.lax.optimization_barrier(
-            params.truth["capacity"] * xs["cap_scale"])
-        # 1-2. power pipeline + load forecasting on rolling history
-        power_fn, slope_fn, _ = fleet.power_model_from_history(
-            state.hist_usage, params.lam, params.truth["capacity"],
-            _pd_truth(params), jax.random.fold_in(day_key, 1))
-        fc = fleet.day_forecasts_arrays(
-            state.hist_uif, state.hist_flex_daily, state.hist_res_daily,
-            state.hist_usage, state.hist_res, state.hist_tr_pred,
-            state.hist_uif_pred, state.day, params.gamma)
-        fc = jax.lax.optimization_barrier(fc)
-        # 3. carbon pipeline: scenario-perturbed grid, day-ahead forecast
-        act_z, fc_z = jax.lax.optimization_barrier(_zone_day(
-            params, state, jax.random.fold_in(day_key, 4),
-            xs["green_scale"], xs["coal_scale"]))
-        eta_act = act_z[state.zmap]
-        eta_fc = fc_z[state.zmap]
-        # 4. fleetwide risk-aware VCC optimization (+ optional spatial
-        #    pre-shift; mobility == 0 collapses the shift to exactly zero)
-        prob = fleet.build_problem_arrays(
-            fc, eta_fc, power_fn, slope_fn, state.queue,
-            state.u_pow_cap * xs["cap_scale"], cap_day, state.campus,
-            state.campus_limit * xs["campus_scale"],
-            params.lambda_e, params.lambda_p)
-        prob = jax.lax.optimization_barrier(prob)
-        tau_shifted, _ = spatial.spatial_shift(prob,
-                                               mobility=params.mobility,
-                                               iters=cfg.spatial_iters)
-        tau_shifted = jax.lax.optimization_barrier(tau_shifted)
-        prob = dataclasses.replace(prob, tau=tau_shifted)
-        sol = vcc.solve_vcc(prob)
-        # 5. SLO gate: paused clusters get VCC = machine capacity
-        gate = state.shaping_allowed & sol.shaped
-        vcc_curve = jnp.where(gate[:, None], sol.vcc, cap_day[:, None] * 10.0)
-        vcc_curve = jax.lax.optimization_barrier(vcc_curve)
-        # record predictions for trailing-error quantiles
-        hist_tr_pred = _roll(state.hist_tr_pred, fc["tr"])
-        hist_uif_pred = _roll(state.hist_uif_pred, fc["uif"])
-        # 6. real time: admission on ACTUAL load (+ counterfactual)
-        res, cf, u_if, _ = _observe(params, state, day_key, vcc_curve,
-                                    cap_day, xs["arrival_scale"], power_fn,
-                                    eta_act)
-        # 7. telemetry + SLO feedback
-        slo_state = {"crowded_streak": state.crowded_streak,
-                     "pause_left": state.pause_left,
-                     "violation_days": state.violation_days,
-                     "observed_days": state.observed_days}
-        new_slo, allowed = slo.update(slo_state, slo_cfg,
-                                      _hsum(res.reservations),
-                                      _hsum(vcc_curve), res.unmet)
-        new_state = state._replace(
-            day=state.day + 1,
-            hist_uif=_roll(state.hist_uif, u_if),
-            hist_flex_daily=_roll(state.hist_flex_daily, res.served),
-            hist_res_daily=_roll(state.hist_res_daily,
-                                 _hsum(res.reservations)),
-            hist_usage=_roll(state.hist_usage, res.usage_total),
-            hist_res=_roll(state.hist_res, res.reservations),
-            hist_tr_pred=hist_tr_pred,
-            hist_uif_pred=hist_uif_pred,
-            carbon_hist=_roll(state.carbon_hist, act_z),
-            queue=res.queue_end,
-            cf_queue=cf.queue_end,
-            crowded_streak=new_slo["crowded_streak"],
-            pause_left=new_slo["pause_left"],
-            violation_days=new_slo["violation_days"],
-            observed_days=new_slo["observed_days"],
-            shaping_allowed=allowed,
-        )
-        return new_state, _metrics(res, cf)
-
-    return step
-
-
-def _burnin_step(cfg: SimConfig, params: SimParams, state: SimState
-                 ) -> SimState:
-    """One unshaped day with the cheap linear power proxy (history fill)."""
-    day_key = jax.random.fold_in(params.key, state.day)
-    cap = params.truth["capacity"]
-
-    def proxy_power(u):
-        return 100.0 + 300.0 * u
-
-    act_z, _ = _zone_day(params, state, jax.random.fold_in(day_key, 4),
-                         jnp.ones_like(params.zone["solar_cap"]),
-                         jnp.ones_like(params.zone["solar_cap"]))
-    unshaped = jnp.broadcast_to(cap[:, None] * 10.0,
-                                (cap.shape[0], 24))
-    u_if = fleet._sample_inflexible(jax.random.fold_in(day_key, 2),
-                                    params.truth, state.day)
-    u_if = jnp.minimum(u_if, 0.98 * cap[:, None])
-    arrivals = fleet._sample_arrivals(jax.random.fold_in(day_key, 3),
-                                      params.truth, state.day)
-    ratio_true = fleet._true_ratio(params.truth, u_if + arrivals)
-    u_if, arrivals, ratio_true = jax.lax.optimization_barrier(
-        (u_if, arrivals, ratio_true))
-    res = admission.run_day(unshaped, u_if, arrivals, ratio_true, cap,
-                            state.queue, proxy_power, act_z[state.zmap])
-    res = _barrier_result(res)
-    return state._replace(
-        day=state.day + 1,
-        hist_uif=_roll(state.hist_uif, u_if),
-        hist_flex_daily=_roll(state.hist_flex_daily, res.served),
-        hist_res_daily=_roll(state.hist_res_daily,
-                             _hsum(res.reservations)),
-        hist_usage=_roll(state.hist_usage, res.usage_total),
-        hist_res=_roll(state.hist_res, res.reservations),
-        carbon_hist=_roll(state.carbon_hist, act_z),
-        queue=res.queue_end,
-        cf_queue=res.queue_end,
-    )
+    """The staged CICS day (see stages.make_day_step):
+    step(params, state, xs) -> (state', StepOut)."""
+    return stages.make_day_step(cfg.stage_config())
 
 
 def make_init(cfg: SimConfig):
     """init(params) -> burned-in SimState. jit- and vmap-compatible."""
-    n, m, z, H = (cfg.n_clusters, cfg.n_campuses, cfg.n_zones,
-                  cfg.hist_days)
-    campus_np = np.arange(n) % m
-    zmap_np = (np.arange(m) % z)[campus_np]
-
-    def init(params: SimParams) -> SimState:
-        cap = params.truth["capacity"]
-        state = SimState(
-            day=jnp.zeros((), jnp.int32),
-            campus=jnp.asarray(campus_np, jnp.int32),
-            zmap=jnp.asarray(zmap_np, jnp.int32),
-            campus_limit=jnp.zeros((m,), f32),
-            u_pow_cap=cap * 0.95,
-            hist_uif=jnp.zeros((n, H, 24), f32),
-            hist_flex_daily=jnp.zeros((n, H), f32),
-            hist_res_daily=jnp.zeros((n, H), f32),
-            hist_usage=jnp.zeros((n, H, 24), f32),
-            hist_res=jnp.zeros((n, H, 24), f32),
-            hist_tr_pred=jnp.zeros((n, H), f32),
-            hist_uif_pred=jnp.zeros((n, H, 24), f32),
-            carbon_hist=jnp.zeros((z, H, 24), f32),
-            queue=jnp.zeros((n,), f32),
-            cf_queue=jnp.zeros((n,), f32),
-            crowded_streak=jnp.zeros((n,), jnp.int32),
-            pause_left=jnp.zeros((n,), jnp.int32),
-            violation_days=jnp.zeros((n,), jnp.int32),
-            observed_days=jnp.zeros((n,), jnp.int32),
-            shaping_allowed=jnp.ones((n,), bool),
-        )
-
-        def burn(s, _):
-            return _burnin_step(cfg, params, s), None
-
-        state, _ = jax.lax.scan(burn, state, None, length=H)
-        # zero-error prediction prior; honest quantiles build up in-horizon
-        state = state._replace(hist_tr_pred=state.hist_res_daily,
-                               hist_uif_pred=state.hist_uif)
-        # campus contracts: 97% of fitted-model campus peak over last week
-        power_fn, _, _ = fleet.power_model_from_history(
-            state.hist_usage, params.lam, cap, _pd_truth(params),
-            jax.random.fold_in(params.key, 999))
-        upow = jax.vmap(power_fn, in_axes=1, out_axes=1)(
-            state.hist_usage[:, -7:].reshape(n, -1))
-        peak = upow.max(axis=1)
-        limit = jax.ops.segment_sum(peak, state.campus,
-                                    num_segments=m) * 0.97
-        state = state._replace(campus_limit=limit.astype(f32))
-        # materialize: burned-in state must not fuse into rollout consumers
-        # (jit(init + rollout) would otherwise drift vs separate calls)
-        return jax.lax.optimization_barrier(state)
-
-    return init
+    return stages.make_init(cfg.n_clusters, cfg.n_campuses, cfg.n_zones,
+                            cfg.hist_days)
 
 
 def _day_xs(params: SimParams, d=None):
@@ -405,7 +112,8 @@ def make_rollout(cfg: SimConfig, days: int):
 
         def body(carry, xs):
             s, led = carry
-            s, metrics = step(params, s, xs)
+            s, out = step(params, s, xs)
+            metrics = _metrics(out.res, out.cf)
             led = ledger_update(led, metrics)
             traj = {"carbon_kg": _hsum(metrics.carbon_kg),
                     "cf_carbon_kg": _hsum(metrics.cf_carbon_kg),
@@ -435,15 +143,55 @@ def rollout_batch(cfg: SimConfig, days: int):
     return run
 
 
+def rollout_batch_sharded(cfg: SimConfig, days: int, mesh=None):
+    """`rollout_batch` with the (scenario x seed) batch axis sharded over
+    a 1-D device mesh (`launch.mesh.make_batch_mesh()` over all local
+    devices by default). Each device runs its vmap'd slice of the batch;
+    there is no cross-rollout communication, so the result is bitwise
+    identical to the unsharded `rollout_batch` (parity-tested).
+
+    The leading batch extent must divide by the mesh size — pad the batch
+    (e.g. repeat a seed) or pass a smaller mesh otherwise.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_batch_mesh, shard_map_compat
+
+    if mesh is None:
+        mesh = make_batch_mesh()
+    n_dev = mesh.devices.size
+    init = make_init(cfg)
+    roll = make_rollout(cfg, days)
+
+    def one(p):
+        return roll(p, init(p))
+
+    # P("batch") as a prefix spec: shard the leading axis of every leaf
+    mapped = shard_map_compat(jax.vmap(one), mesh=mesh,
+                              in_specs=P("batch"), out_specs=P("batch"))
+    mapped = jax.jit(mapped)
+
+    def run(params: SimParams):
+        b = jax.tree_util.tree_leaves(params)[0].shape[0]
+        if b % n_dev:
+            raise ValueError(
+                f"batch of {b} rollouts does not divide across the "
+                f"{n_dev}-device mesh; pad the (scenario x seed) batch or "
+                "pass a smaller mesh")
+        return mapped(params)
+
+    return run
+
+
 def rollout_sequential(cfg: SimConfig, days: int, params: SimParams,
                        state: SimState):
     """Debugging reference: drive the SAME jitted day step from a Python
     loop. Agrees with the scan engine to float tolerance (XLA may compile
     the standalone step with different FMA/fusion choices than the scan
     body); the bitwise guarantee is batched-vs-unbatched `make_rollout`."""
-    step = jax.jit(make_day_step(cfg))
+    step = stages.jitted_day_step(cfg.stage_config())
     ledger = init_ledger(cfg.n_clusters)
     for d in range(days):
-        state, metrics = step(params, state, _day_xs(params, d))
-        ledger = ledger_update(ledger, metrics)
+        state, out = step(params, state, _day_xs(params, d))
+        ledger = ledger_update(ledger, _metrics(out.res, out.cf))
     return state, ledger

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import carbon, fleet
+from repro.core import stages
 from repro.sim.engine import SimConfig, SimParams
 
 f32 = jnp.float32
@@ -134,17 +134,9 @@ def build_params(cfg: SimConfig, scenario: Scenario, seed: int, days: int
 
     Pure: identical (cfg, scenario, seed, days) -> identical arrays.
     """
-    n, m, z, npds = (cfg.n_clusters, cfg.n_campuses, cfg.n_zones,
-                     cfg.pds_per_cluster)
-    key = jax.random.PRNGKey(seed)
-    ks = jax.random.split(key, 8)
-    truth = fleet.cluster_truth(ks[0], n)
-    npd = n * npds
-    pd_idle = 60.0 + 40.0 * jax.random.uniform(ks[1], (npd,))
-    pd_slope = 250.0 + 150.0 * jax.random.uniform(ks[2], (npd,))
-    pd_curve = 0.8 + 0.5 * jax.random.uniform(ks[3], (npd,))
-    lam = jax.nn.softmax(jax.random.normal(ks[4], (n, npds)), axis=1)
-    zone = carbon.stack_zone_params(carbon.default_zones(z))
+    n, m, z = cfg.n_clusters, cfg.n_campuses, cfg.n_zones
+    # the same synthesis leaves the legacy fleet path uses (stage core)
+    sp = stages.synth_params(seed, n, cfg.pds_per_cluster, z)
 
     sched = {
         "green_scale": np.ones((days, z)),
@@ -158,9 +150,9 @@ def build_params(cfg: SimConfig, scenario: Scenario, seed: int, days: int
         p.apply(sched, rng, cfg)
 
     return SimParams(
-        key=jax.random.fold_in(key, 17),
-        truth=truth, pd_idle=pd_idle, pd_slope=pd_slope, pd_curve=pd_curve,
-        lam=lam, zone=zone,
+        key=sp["key"],
+        truth=sp["truth"], pd_idle=sp["pd_idle"], pd_slope=sp["pd_slope"],
+        pd_curve=sp["pd_curve"], lam=sp["lam"], zone=sp["zone"],
         lambda_e=jnp.asarray(scenario.lambda_e, f32),
         lambda_p=jnp.asarray(scenario.lambda_p, f32),
         gamma=jnp.asarray(scenario.gamma, f32),

@@ -7,7 +7,7 @@ import pytest
 from repro.sim import (Scenario, SimConfig, build_batch, build_params,
                        default_library, init_ledger, ledger_update,
                        make_init, make_rollout, rollout_batch,
-                       rollout_sequential, summarize)
+                       rollout_batch_sharded, rollout_sequential, summarize)
 from repro.sim.ledger import DayMetrics
 from repro.sim.scenarios import ClusterOutage, DemandSurge, RenewableDrought
 
@@ -127,6 +127,28 @@ def test_vmap_batch_matches_sequential_runs():
     for a, b in zip(jax.tree.leaves(led_scan), jax.tree.leaves(led_seq)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-4, atol=1e-4)
+
+
+def test_sharded_batch_matches_unsharded():
+    """rollout_batch_sharded (shard_map over the 1-D device mesh) must
+    reproduce rollout_batch BITWISE: rollouts are embarrassingly parallel
+    and the numerics are batch-invariant, so device placement must not
+    change a single bit. Also: a batch that does not divide across the
+    mesh is rejected loudly."""
+    scens = default_library(DAYS)[:3]
+    # size the batch to divide whatever mesh the host offers
+    batch = build_batch(CFG, scens, list(range(len(jax.devices()))), DAYS)
+    _, led, traj = rollout_batch(CFG, DAYS)(batch)
+    run_sharded = rollout_batch_sharded(CFG, DAYS)
+    _, led_s, traj_s = run_sharded(batch)
+    for a, b in zip(jax.tree.leaves((led, traj)),
+                    jax.tree.leaves((led_s, traj_s))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    n_dev = len(jax.devices())
+    if n_dev > 1:                              # pragma: no cover
+        bad = build_batch(CFG, scens[:1], list(range(n_dev + 1)), DAYS)
+        with pytest.raises(ValueError, match="divide"):
+            run_sharded(bad)
 
 
 def test_counterfactual_serves_no_less():

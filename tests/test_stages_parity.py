@@ -1,0 +1,149 @@
+"""The staged core is the ONE day cycle: the legacy fleet adapters and the
+sim engine must produce identical states/VCCs from the same inputs, and
+solve_vcc's kernel dispatch path must match its jnp oracle path on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fleet as F
+from repro.core import vcc
+from repro.sim import (Scenario, SimConfig, build_params, make_day_step,
+                       make_init)
+from repro.sim.engine import _day_xs
+
+N, M, Z, PDS, HIST = 4, 2, 2, 2, 14
+SEED = 0
+LAMBDA_E, LAMBDA_P, GAMMA = 0.5, 0.05, 0.05
+
+SIM_CFG = SimConfig(n_clusters=N, n_campuses=M, n_zones=Z,
+                    pds_per_cluster=PDS, hist_days=HIST)
+FLEET_CFG = F.FleetConfig(n_clusters=N, n_campuses=M, n_zones=Z,
+                          pds_per_cluster=PDS, lambda_e=LAMBDA_E,
+                          lambda_p=LAMBDA_P, gamma=GAMMA, seed=SEED,
+                          hist_days=HIST)
+
+
+@pytest.fixture(scope="module")
+def engine_side():
+    sc = Scenario("parity_probe", lambda_e=LAMBDA_E, lambda_p=LAMBDA_P,
+                  gamma=GAMMA)
+    params = build_params(SIM_CFG, sc, seed=SEED, days=3)
+    state = jax.jit(make_init(SIM_CFG))(params)
+    return params, state
+
+
+@pytest.fixture(scope="module")
+def fleet_side():
+    return F.init_fleet(FLEET_CFG)
+
+
+def test_legacy_burnin_matches_engine_init(engine_side, fleet_side):
+    """init_fleet (FleetState wrapper) and the engine's make_init burn in
+    the SAME state bitwise — one lax.scan burn-in, two adapters."""
+    _, s = engine_side
+    st = fleet_side
+    for name, a, b in (
+            ("hist_uif", st.hist_uif, s.hist_uif),
+            ("hist_usage", st.hist_usage, s.hist_usage),
+            ("hist_res", st.hist_res, s.hist_res),
+            ("hist_flex_daily", st.hist_flex_daily, s.hist_flex_daily),
+            ("hist_res_daily", st.hist_res_daily, s.hist_res_daily),
+            ("hist_tr_pred", st.hist_tr_pred, s.hist_tr_pred),
+            ("hist_uif_pred", st.hist_uif_pred, s.hist_uif_pred),
+            ("carbon_hist", st.carbon_hist, s.carbon_hist),
+            ("campus_limit", st.campus_limit, s.campus_limit),
+            ("queue", st.queue, s.queue),
+            ("cf_queue", st.cf_queue, s.cf_queue)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+    assert int(st.day) == int(s.day) == HIST
+
+
+def test_day_cycle_matches_engine_day_step(engine_side, fleet_side):
+    """Three legacy day_cycle days == three engine day_step days, bitwise:
+    identical VCC curves, admission results, rolled histories, SLO state."""
+    params, s = engine_side
+    st = fleet_side
+    step = jax.jit(make_day_step(SIM_CFG))
+    for d in range(3):
+        s, out = step(params, s, _day_xs(params, d))
+        rec = {}
+        st = F.day_cycle(st, rec)
+        np.testing.assert_array_equal(np.asarray(rec["vcc"]),
+                                      np.asarray(out.vcc_curve),
+                                      err_msg=f"vcc day {d}")
+        for name, a, b in (
+                ("delta", rec["sol"].delta, out.sol.delta),
+                ("shaped", rec["sol"].shaped, out.sol.shaped),
+                ("carbon", rec["result"].carbon, out.res.carbon),
+                ("served", rec["result"].served, out.res.served),
+                ("cf_carbon", rec["cf_result"].carbon, out.cf.carbon),
+                ("intensity", rec["intensity"], out.eta_act)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"{name} day {d}")
+        # carried state stays in lockstep
+        for name, a, b in (
+                ("queue", st.queue, s.queue),
+                ("cf_queue", st.cf_queue, s.cf_queue),
+                ("hist_usage", st.hist_usage, s.hist_usage),
+                ("shaping_allowed", st.shaping_allowed,
+                 s.shaping_allowed),
+                ("pause_left", st.slo_state["pause_left"], s.pause_left)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"{name} day {d}")
+        assert int(st.day) == int(s.day)
+
+
+def _vcc_problem(n=12, seed=7):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    H = 24
+    eta = jnp.abs(0.3 + 0.25 * jnp.sin(jnp.linspace(0, 2 * jnp.pi, H))[None]
+                  + 0.05 * jax.random.normal(ks[0], (n, H)))
+    u_if = 0.4 + 0.05 * jax.random.normal(ks[1], (n, H))
+    tau = 2.0 + 3.0 * jax.random.uniform(ks[2], (n,))
+    pow_nom = 500.0 + 20.0 * jax.random.normal(ks[3], (n, H))
+    return vcc.VCCProblem(
+        eta=eta, u_if=u_if, u_if_q=u_if * 1.1, tau=tau,
+        pow_nom=pow_nom, pi=jnp.full((n, H), 300.0),
+        u_pow_cap=jnp.full((n,), 0.95), capacity=jnp.full((n,), 1.3),
+        ratio=jnp.full((n, H), 1.3),
+        campus=jnp.asarray(np.arange(n) % 2, jnp.int32),
+        campus_limit=jnp.full((2,), 1e9),
+        lambda_e=0.1, lambda_p=0.05, drop_limit=1.0)
+
+
+def test_solve_vcc_interpret_kernel_matches_ref():
+    """The vcc_pgd kernel path INSIDE solve_vcc (Pallas interpreter on
+    CPU) must match the jnp oracle path: same inner-loop math, two
+    dispatch targets."""
+    p = _vcc_problem()
+    ref = vcc.solve_vcc(p, inner_iters=40, outer_iters=4, use_pallas=False)
+    ker = vcc.solve_vcc(p, inner_iters=40, outer_iters=4, interpret=True)
+    np.testing.assert_allclose(np.asarray(ker.delta), np.asarray(ref.delta),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ker.vcc), np.asarray(ref.vcc),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(ker.shaped),
+                                  np.asarray(ref.shaped))
+    np.testing.assert_allclose(float(ker.objective), float(ref.objective),
+                               rtol=1e-5)
+
+
+def test_solve_vcc_traced_scalars_under_jit_and_vmap():
+    """The dispatcher accepts traced temp/lambda_e: solve_vcc must jit and
+    vmap cleanly through kernels.vcc_pgd.ops (the old wrapper called
+    float() on them and could not)."""
+    p = _vcc_problem(n=6)
+    sol_eager = vcc.solve_vcc(p, inner_iters=10, outer_iters=2)
+    sol_jit = jax.jit(lambda q: vcc.solve_vcc(q, inner_iters=10,
+                                              outer_iters=2))(p)
+    np.testing.assert_allclose(np.asarray(sol_jit.delta),
+                               np.asarray(sol_eager.delta),
+                               rtol=1e-5, atol=1e-6)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           _vcc_problem(n=6, seed=1),
+                           _vcc_problem(n=6, seed=2))
+    solb = vcc.solve_vcc_batched(stacked, inner_iters=10, outer_iters=2)
+    assert solb.delta.shape == (2, 6, 24)
