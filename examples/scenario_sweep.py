@@ -17,15 +17,50 @@ change, only the wall clock on multi-device hosts).
 Reading the table: carbon-priced scenarios trade peak power for carbon
 (negative peakRed% — the 'War of the Efficiencies'); `peak_shaver` flips
 the prices and the sign.
+
+``--risk`` swaps in the risk-sweep family (`risk_sweep_library`): CVaR
+tail fraction beta in {0.5, 0.9, 0.99} under drought + surge, run once
+per ensemble size K in RISK_MEMBERS = {1, 8, 32} (K is a static shape —
+one compile each; beta is a data leaf — the sweep batches). K=1 is the
+degenerate control: every beta row is identical to the point-forecast
+path.
 """
 import argparse
 import time
 
 import jax
 
-from repro.sim import (SimConfig, build_batch, default_library,
-                       format_table, rollout_batch, rollout_batch_sharded,
-                       scenario_rows)
+from repro.sim import (RISK_COLUMNS, RISK_MEMBERS, SimConfig, build_batch,
+                       default_library, format_table, risk_sweep_library,
+                       risk_sweep_rows, rollout_batch,
+                       rollout_batch_sharded, scenario_rows)
+
+
+def run_risk_sweep(args):
+    scenarios = risk_sweep_library(args.days)
+    seeds = list(range(args.seeds))
+    engine = rollout_batch_sharded if args.sharded else rollout_batch
+    ledgers_by_k = {}
+    for k in RISK_MEMBERS:
+        cfg = SimConfig(n_clusters=args.clusters, n_campuses=4, n_zones=4,
+                        pds_per_cluster=2, hist_days=args.hist,
+                        n_members=k)
+        batch = build_batch(cfg, scenarios, seeds, args.days)
+        t0 = time.time()
+        _, led, _ = engine(cfg, args.days)(batch)
+        jax.block_until_ready(led)
+        print(f"K={k}: {len(scenarios) * len(seeds)} rollouts in "
+              f"{time.time() - t0:.1f}s incl. compile")
+        ledgers_by_k[k] = led
+    rows = risk_sweep_rows(ledgers_by_k, [s.name for s in scenarios],
+                           len(seeds))
+    for r in rows:
+        r["scenario"] = f"K={r['n_members']:<3d} {r['scenario']}"
+    print()
+    print(format_table(rows, RISK_COLUMNS))
+    print("\n(risk_beta = averaged worst-tail fraction: smaller = more "
+          "risk-averse; K=1 rows are the degenerate point-forecast "
+          "control)")
 
 
 def main():
@@ -37,9 +72,15 @@ def main():
     ap.add_argument("--sharded", action="store_true",
                     help="shard the (scenario x seed) batch over all "
                          "local devices (bitwise-identical results)")
+    ap.add_argument("--risk", action="store_true",
+                    help="run the CVaR risk-sweep family (beta x K) "
+                         "instead of the default library")
     args = ap.parse_args()
     if args.days < 1 or args.seeds < 1:
         ap.error("--days and --seeds must be >= 1")
+    if args.risk:
+        run_risk_sweep(args)
+        return
 
     cfg = SimConfig(n_clusters=args.clusters, n_campuses=4, n_zones=4,
                     pds_per_cluster=2, hist_days=args.hist)

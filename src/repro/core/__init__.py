@@ -2,14 +2,15 @@
 
 Pipelines (paper Fig. 4): carbon fetching (carbon.py), power models
 (power.py), load forecasting (forecast.py), risk-aware VCC optimization
-(vcc.py), SLO violation detection (slo.py), Borg-like admission under VCCs
+(vcc.py), forecast ensembles + CVaR risk objective (risk.py), SLO
+violation detection (slo.py), Borg-like admission under VCCs
 (admission.py), and the beyond-paper spatial shifting extension
 (spatial.py). ``stages.py`` composes them into THE staged day cycle (pure
 stage functions -> one pure day step) shared by both drivers; ``fleet.py``
 is the legacy mutable-FleetState adapter over it.
 """
-from repro.core import (admission, carbon, fleet, forecast, power, slo,
-                        spatial, stages, vcc)
+from repro.core import (admission, carbon, fleet, forecast, power, risk,
+                        slo, spatial, stages, vcc)
 
-__all__ = ["admission", "carbon", "fleet", "forecast", "power", "slo",
-           "spatial", "stages", "vcc"]
+__all__ = ["admission", "carbon", "fleet", "forecast", "power", "risk",
+           "slo", "spatial", "stages", "vcc"]

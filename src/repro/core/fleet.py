@@ -112,6 +112,7 @@ def sim_params(state: FleetState) -> stages.SimParams:
         lambda_p=jnp.asarray(cfg.lambda_p, f32),
         gamma=jnp.asarray(cfg.gamma, f32),
         mobility=jnp.zeros((), f32),
+        risk_beta=jnp.ones((), f32),
         green_scale=ones((1, cfg.n_zones)),
         coal_scale=ones((1, cfg.n_zones)),
         cap_scale=ones((1, cfg.n_clusters)),

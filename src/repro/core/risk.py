@@ -1,0 +1,191 @@
+"""Risk-aware VCC generation: forecast ensembles + CVaR-of-carbon-cost.
+
+The paper's loop ("train day-ahead demand prediction models, and use
+risk-aware optimization to generate ... carbon-aware VCCs") prices forecast
+risk today through one static quantile inflation (eq. 3's alpha via
+``forecast.relative_error_quantile``). This module closes the other half:
+*optimize against the forecast uncertainty itself*.
+
+Model
+-----
+* **Ensembles.** K day-ahead realizations of (inflexible usage, carbon
+  intensity) are sampled by bootstrap-resampling whole DAYS of the
+  empirical relative-error history the day cycle already tracks
+  (``hist_uif_pred`` vs ``hist_uif`` for load; day-over-day intensity
+  changes in ``carbon_hist`` as the persistence-error proxy for carbon).
+  Resampling whole days preserves the intra-day error autocorrelation, and
+  one day index is drawn per member FLEETWIDE, preserving the cross-cluster
+  / cross-zone correlation that makes tail days tail days. Member 0 is
+  always the point forecast itself.
+
+* **CVaR objective.** For member costs X_1..X_K the optimizer targets
+  CVaR_beta(X) = mean of the worst ``beta`` fraction of outcomes
+  ("top-beta tail average"): ``beta = 1`` is the risk-neutral mean and
+  recovers today's point-forecast path exactly; smaller beta is more
+  risk-averse (``beta -> 0`` is the worst member). The PGD inner loop uses
+  a smooth tilt — softmax member weights with sharpness
+  ``kernels.vcc_pgd.ref.cvar_sharpness(beta)`` on per-cluster member
+  costs — reduced over the member axis *inside* the vcc_pgd kernel. The
+  member reduction is anchored on member 0, so K identical members (and
+  the K=1 degenerate ensemble) reproduce the legacy optimizer bitwise.
+
+Knobs: ``SimConfig.n_members`` / ``StageConfig.n_members`` set K (a static
+shape); ``Scenario.risk_beta`` -> ``SimParams.risk_beta`` sets beta (a data
+leaf, so scenario sweeps batch it). See README "Risk model".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.vcc_pgd.ref import cvar_sharpness  # noqa: F401 (re-export)
+
+f32 = jnp.float32
+
+# clip bounds on resampled relative errors: one historical day must not
+# produce a negative or absurd realization
+ERR_LO, ERR_HI = -0.9, 3.0
+
+
+# ------------------------------------------------------------------- CVaR
+
+def cvar(x: jnp.ndarray, beta, axis: int = 0) -> jnp.ndarray:
+    """Hard CVaR: mean of the worst ``ceil(beta * K)`` outcomes along
+    ``axis`` (top-beta tail average). ``beta=1`` -> mean of all members;
+    ``beta -> 0`` -> max. Exact and sort-based — reporting/tests; the
+    optimizer uses ``soft_cvar``. ``beta`` may be a traced scalar (the
+    tail count becomes a mask over the sorted members, so this jits and
+    vmaps — risk sweeps carry beta as a data leaf)."""
+    K = x.shape[axis]
+    xs = jnp.flip(jnp.sort(jnp.moveaxis(x, axis, -1), axis=-1), axis=-1)
+    k = jnp.clip(jnp.ceil(jnp.asarray(beta, f32) * K), 1.0, K)
+    w = (jnp.arange(K, dtype=f32) < k).astype(x.dtype) / k.astype(x.dtype)
+    return jnp.sum(xs * w, axis=-1)
+
+
+def soft_cvar(x: jnp.ndarray, beta, axis: int = 0) -> jnp.ndarray:
+    """Differentiable CVaR surrogate: softmax-tilted member average with
+    sharpness ``cvar_sharpness(beta)`` on mean-centered, scale-normalized
+    outcomes. ``beta`` may be traced. Properties (tested): equals the mean
+    at ``beta=1``, is monotone non-increasing in beta (more risk-averse =
+    smaller beta = larger value), and lies in [mean(x), max(x)]."""
+    s = cvar_sharpness(beta)
+    z = x - jnp.mean(x, axis=axis, keepdims=True)
+    scale = jnp.mean(jnp.abs(z), axis=axis, keepdims=True) + 1e-9
+    w = jax.nn.softmax(s * z / scale, axis=axis)
+    return jnp.sum(w * x, axis=axis)
+
+
+# ------------------------------------------------------------- ensembles
+
+def relative_error_days(pred_hist: jnp.ndarray, actual_hist: jnp.ndarray
+                        ) -> jnp.ndarray:
+    """Empirical per-day relative-error profiles (act - pred) / |pred|.
+    pred/actual: (..., D, 24) -> (..., D, 24)."""
+    return (actual_hist - pred_hist) / jnp.clip(jnp.abs(pred_hist), 1e-9,
+                                                None)
+
+
+def _member_day_idx(key, n_members: int, n_days: int) -> jnp.ndarray:
+    """One resampled history-day index per member, shared fleetwide.
+    Member 0 is pinned to 'no error' by the callers (index unused)."""
+    return jax.random.randint(key, (n_members,), 0, n_days)
+
+
+def sample_uif_ensemble(key, uif_pred, hist_uif_pred, hist_uif,
+                        n_members: int) -> jnp.ndarray:
+    """K realizations of next-day inflexible usage. uif_pred: (n, 24);
+    hist_*: (n, D, 24) rolling prediction/actual history. Returns
+    (K, n, 24) with member 0 == the point forecast bitwise."""
+    err = relative_error_days(hist_uif_pred, hist_uif)       # (n, D, 24)
+    idx = _member_day_idx(key, n_members, err.shape[1])
+    e = jnp.clip(err[:, idx], ERR_LO, ERR_HI)                # (n, K, 24)
+    e = jnp.moveaxis(e, 1, 0).at[0].set(0.0)                 # (K, n, 24)
+    return jnp.clip(uif_pred[None] * (1.0 + e), 0.0, None)
+
+
+def sample_eta_ensemble(key, fc_z, carbon_hist, zmap, n_members: int
+                        ) -> jnp.ndarray:
+    """K realizations of next-day carbon intensity per cluster.
+
+    fc_z: (z, 24) day-ahead zone forecast; carbon_hist: (z, D, 24) actual
+    zone history; zmap: (n,) zone of cluster. Day-ahead forecast errors are
+    proxied by the empirical day-over-day relative change of the actual
+    intensity (persistence error) — the quantity ``carbon_hist`` already
+    tracks. Returns (K, n, 24) with member 0 == fc_z[zmap] bitwise.
+    """
+    prev = carbon_hist[:, :-1]
+    dz = (carbon_hist[:, 1:] - prev) / jnp.clip(jnp.abs(prev), 1e-9, None)
+    idx = _member_day_idx(key, n_members, dz.shape[1])
+    e = jnp.clip(dz[:, idx], ERR_LO, ERR_HI)                 # (z, K, 24)
+    e = jnp.moveaxis(e, 1, 0).at[0].set(0.0)                 # (K, z, 24)
+    eta_ens_z = jnp.clip(fc_z[None] * (1.0 + e), 1e-6, None)
+    return eta_ens_z[:, zmap]
+
+
+def day_ensembles(key, n_members: int, uif_pred, hist_uif_pred, hist_uif,
+                  fc_z, carbon_hist, zmap, risk_beta
+                  ) -> Dict[str, jnp.ndarray]:
+    """Sample the day's forecast ensembles (the optimize_stage hook).
+    Returns the kwargs of ``attach_ensemble``. jit/vmap-safe."""
+    k_u, k_c = jax.random.split(key)
+    return {
+        "uif_ens": sample_uif_ensemble(k_u, uif_pred, hist_uif_pred,
+                                       hist_uif, n_members),
+        "eta_ens": sample_eta_ensemble(k_c, fc_z, carbon_hist, zmap,
+                                       n_members),
+        "risk_beta": jnp.asarray(risk_beta, f32),
+    }
+
+
+def attach_ensemble(prob, eta_ens, uif_ens, risk_beta):
+    """Attach ensemble axes to a point-forecast VCCProblem.
+
+    Member power curves are the problem's own local linearization around
+    nominal: pow_nom_k = pow_nom + pi * (uif_k - u_if) — the same model
+    the PGD gradient already assumes, so no extra power-model fits. The
+    risk-aware bounds (u_if_q quantile, eq. 3 alpha) stay as-is: ensembles
+    change the OBJECTIVE, not the feasible set.
+    """
+    pow_nom_ens = prob.pow_nom[None] + prob.pi[None] * (uif_ens
+                                                        - prob.u_if[None])
+    return dataclasses.replace(prob, eta_ens=eta_ens,
+                               pow_nom_ens=pow_nom_ens,
+                               risk_beta=jnp.asarray(risk_beta, f32))
+
+
+# ------------------------------------------------------------- objectives
+
+def member_objectives(p, delta, mu) -> jnp.ndarray:
+    """Per-member total day cost (K,) of ``delta`` under each forecast
+    realization (carbon term + hard per-cluster peak term, eq. 4 shape)."""
+    tau24 = p.tau[:, None] / 24.0
+    peak_price = p.lambda_p + mu[p.campus]
+
+    def one(eta_k, pow_nom_k):
+        pow_h = pow_nom_k + p.pi * delta * tau24
+        y = pow_h.max(axis=1)
+        return p.lambda_e * jnp.sum(eta_k * pow_h) \
+            + jnp.sum(peak_price * y)
+
+    return jax.vmap(one)(p.eta_ens, p.pow_nom_ens)
+
+
+def soft_cvar_objective(p, delta, mu) -> jnp.ndarray:
+    """Fleet-level smooth risk surrogate: soft CVaR of the per-member
+    total costs at the problem's ``risk_beta``. The PGD step applies the
+    same tilt (same sharpness, same deviation scale —
+    ``kernels.vcc_pgd.ref.cvar_member_weights``) PER CLUSTER, a separable
+    relaxation of this quantity; improvement is asserted in
+    tests/test_risk.py."""
+    return soft_cvar(member_objectives(p, delta, mu), p.risk_beta, axis=0)
+
+
+def cvar_objective(p, delta, mu, beta=None) -> jnp.ndarray:
+    """Exact (hard) CVaR of the per-member total costs; ``beta`` defaults
+    to the problem's ``risk_beta`` (traced values work — see ``cvar``)."""
+    b = p.risk_beta if beta is None else beta
+    return cvar(member_objectives(p, delta, mu), b, axis=0)

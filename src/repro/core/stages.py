@@ -8,7 +8,10 @@ Every simulated day is the same pipeline (paper Fig. 4/5):
   forecast_stage  — day-ahead U_IF(h), T_UF(d), T_R(d), R(h), trailing
                     -error quantiles -> Theta, alpha (eq. 3)
   optimize_stage  — fleetwide risk-aware VCCs (eq. 4) + optional spatial
-                    pre-shift; PGD inner loop via kernels.vcc_pgd
+                    pre-shift; PGD inner loop via kernels.vcc_pgd; with
+                    StageConfig.n_members > 1 the objective is a CVaR
+                    over K forecast-ensemble members (core.risk) at
+                    SimParams.risk_beta
   (SLO gate)      — paused clusters get VCC = machine capacity
   observe_stage   — Borg-like admission on ACTUAL load, shaped + unshaped
                     counterfactual in the same trace
@@ -36,7 +39,8 @@ from typing import Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import admission, carbon, forecast, power, slo, spatial, vcc
+from repro.core import (admission, carbon, forecast, power, risk, slo,
+                        spatial, vcc)
 
 f32 = jnp.float32
 
@@ -161,6 +165,7 @@ class SimParams(NamedTuple):
     lambda_p: jnp.ndarray             # () peak-power price
     gamma: jnp.ndarray                # () power-capping violation prob
     mobility: jnp.ndarray             # () spatial-shift mobility (0 = off)
+    risk_beta: jnp.ndarray            # () CVaR tail fraction (1 = neutral)
     green_scale: jnp.ndarray          # (days, z) solar+wind multiplier
     coal_scale: jnp.ndarray           # (days, z) coal-share multiplier
     cap_scale: jnp.ndarray            # (days, n) capacity multiplier
@@ -213,6 +218,10 @@ class StageConfig:
     slo_margin: float = 1.0
     slo_pause_days: int = 7
     spatial_iters: int = 100      # spatial pre-shift PGD iterations
+    n_members: int = 1            # forecast-ensemble size K (1 = eq. 4
+    #                               point-forecast path, graph unchanged;
+    #                               K > 1 = CVaR over sampled realizations
+    #                               at SimParams.risk_beta — core.risk)
     use_pallas: Optional[bool] = None   # VCC PGD kernel dispatch (None=auto)
     interpret: bool = False             # Pallas interpreter (CPU tests)
 
@@ -351,11 +360,17 @@ def build_problem_arrays(fc, eta_fc, power_fn, slope_fn, queue, u_pow_cap,
 
 def optimize_stage(cfg: StageConfig, fc, eta_fc, model: PowerModel, queue,
                    u_pow_cap, cap_day, campus, campus_limit, lambda_e,
-                   lambda_p, mobility
+                   lambda_p, mobility, ens: Optional[Dict] = None
                    ) -> Tuple[vcc.VCCProblem, vcc.VCCSolution]:
     """Fleetwide risk-aware VCC optimization (+ optional spatial pre-shift;
     mobility == 0 collapses the shift to exactly zero). The PGD inner loop
-    dispatches through kernels.vcc_pgd per cfg.use_pallas/interpret."""
+    dispatches through kernels.vcc_pgd per cfg.use_pallas/interpret.
+
+    ``ens`` (the ``risk.day_ensembles`` dict, present iff cfg.n_members
+    > 1) attaches K forecast realizations AFTER the spatial pre-shift:
+    the solve then descends the soft-CVaR member tilt instead of the
+    point-forecast objective. With ens=None this graph is IDENTICAL to
+    the pre-ensemble day cycle (golden-trace + parity contract)."""
     prob = build_problem_arrays(
         fc, eta_fc,
         lambda u: model_power(model, u), lambda u: model_slope(model, u),
@@ -365,6 +380,8 @@ def optimize_stage(cfg: StageConfig, fc, eta_fc, model: PowerModel, queue,
                                            iters=cfg.spatial_iters)
     tau_shifted = jax.lax.optimization_barrier(tau_shifted)
     prob = dataclasses.replace(prob, tau=tau_shifted)
+    if ens is not None:
+        prob = risk.attach_ensemble(prob, **ens)
     sol = vcc.solve_vcc(prob, use_pallas=cfg.use_pallas,
                         interpret=cfg.interpret)
     return prob, sol
@@ -441,12 +458,20 @@ def make_day_step(cfg: StageConfig):
                                    xs["green_scale"], xs["coal_scale"])
         eta_act = act_z[state.zmap]
         eta_fc = fc_z[state.zmap]
+        # 3b. forecast ensembles (K > 1 only: the n_members == 1 graph must
+        # stay identical to the point-forecast day — parity/golden traces)
+        ens = None
+        if cfg.n_members > 1:
+            ens = risk.day_ensembles(
+                jax.random.fold_in(day_key, 5), cfg.n_members, fc["uif"],
+                state.hist_uif_pred, state.hist_uif, fc_z,
+                state.carbon_hist, state.zmap, params.risk_beta)
         # 4. fleetwide risk-aware VCC optimization (+ spatial pre-shift)
         prob, sol = optimize_stage(
             cfg, fc, eta_fc, model, state.queue,
             state.u_pow_cap * xs["cap_scale"], cap_day, state.campus,
             state.campus_limit * xs["campus_scale"],
-            params.lambda_e, params.lambda_p, params.mobility)
+            params.lambda_e, params.lambda_p, params.mobility, ens=ens)
         # 5. SLO gate: paused clusters get VCC = machine capacity
         gate = state.shaping_allowed & sol.shaped
         vcc_curve = jnp.where(gate[:, None], sol.vcc, cap_day[:, None] * 10.0)

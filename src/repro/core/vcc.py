@@ -24,6 +24,7 @@ excluded and get VCC = machine capacity (paper: ~10% of clusters per day).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Optional
 
@@ -37,7 +38,15 @@ f32 = jnp.float32
 
 @dataclass(frozen=True)
 class VCCProblem:
-    """Stacked fleetwide problem. n = clusters, H = 24."""
+    """Stacked fleetwide problem. n = clusters, H = 24.
+
+    The optional ensemble axes carry K day-ahead forecast *realizations*
+    (member 0 is the point forecast by convention; ``repro.core.risk``
+    samples them from the empirical relative-error history) and turn the
+    optimizer's objective into a soft CVaR over members — ``risk_beta`` is
+    the averaged worst-tail fraction (1.0 = risk-neutral mean = the
+    eq. 4 point-forecast path).
+    """
     eta: jnp.ndarray          # (n, H) carbon intensity forecast kg/kWh
     u_if: jnp.ndarray         # (n, H) predicted inflexible CPU
     u_if_q: jnp.ndarray       # (n, H) (1-gamma) quantile of inflexible CPU
@@ -51,6 +60,10 @@ class VCCProblem:
     campus_limit: jnp.ndarray  # (n_dc,) power limits (kW)
     lambda_e: float = 0.05    # $ / kg CO2e
     lambda_p: float = 0.1     # $ / kW / day
+    # forecast-ensemble axes (None = point-forecast problem, eq. 4)
+    eta_ens: Optional[jnp.ndarray] = None      # (K, n, H) intensity members
+    pow_nom_ens: Optional[jnp.ndarray] = None  # (K, n, H) nominal power
+    risk_beta: float = 1.0    # CVaR tail fraction (1.0 = risk-neutral)
     # paper §III-C "other constraints": bound the allowed intraday drop in
     # flexible usage (1.0 = flexible may drop to zero)
     drop_limit: float = 0.8
@@ -58,12 +71,14 @@ class VCCProblem:
 
 # Pytree registration: every field except the static drop_limit is data, so
 # stacked problems can cross vmap/scan boundaries (sim engine, sweeps).
-# lambda_e / lambda_p are data leaves — scenario sweeps batch them.
+# lambda_e / lambda_p / risk_beta are data leaves — scenario sweeps batch
+# them; the None ensemble fields flatten to empty subtrees until attached.
 jax.tree_util.register_dataclass(
     VCCProblem,
     data_fields=["eta", "u_if", "u_if_q", "tau", "pow_nom", "pi",
                  "u_pow_cap", "capacity", "ratio", "campus", "campus_limit",
-                 "lambda_e", "lambda_p"],
+                 "lambda_e", "lambda_p", "eta_ens", "pow_nom_ens",
+                 "risk_beta"],
     meta_fields=["drop_limit"])
 
 
@@ -115,7 +130,16 @@ def smooth_peak(pow_h, temp):
     return jnp.sum(w * pow_h, axis=1), w
 
 
-def objective(p: VCCProblem, delta, mu):
+def objective(p: VCCProblem, delta, mu, *, risk: bool = True):
+    """Day cost of ``delta``. Point-forecast problems get eq. 4 exactly;
+    problems carrying ensemble axes get the soft-CVaR ensemble objective
+    (``risk.soft_cvar_objective``) unless ``risk=False`` forces the
+    nominal (member-0/point-forecast) evaluation — which is what
+    ``solve_vcc`` records in ``VCCSolution.objective`` so the field stays
+    comparable (and bitwise-stable) across risk settings."""
+    if risk and p.eta_ens is not None:
+        from repro.core import risk as _risk
+        return _risk.soft_cvar_objective(p, delta, mu)
     pow_h = cluster_power(p, delta)
     y = pow_h.max(axis=1)
     carbon = p.lambda_e * jnp.sum(p.eta * pow_h)
@@ -126,9 +150,14 @@ def objective(p: VCCProblem, delta, mu):
 def pgd_step(p: VCCProblem, delta, mu, lo, ub, lr, temp):
     """One projected-gradient step (the Pallas-kernelized hotspot).
     Thin adapter over the kernel package's shared step — the same math the
-    Pallas kernel fuses in VMEM (no second jnp copy of the inner body)."""
+    Pallas kernel fuses in VMEM (no second jnp copy of the inner body).
+    Ensemble problems descend the soft-CVaR member tilt instead."""
     tau24 = p.tau[:, None] / 24.0
     peak_price = (p.lambda_p + mu[p.campus])[:, None]
+    if p.eta_ens is not None:
+        return _pgd_ref.pgd_step_ens_arrays(
+            delta, p.eta_ens, p.pi, p.pow_nom_ens, tau24, peak_price, lo,
+            ub, lr, temp, p.lambda_e, _pgd_ref.cvar_sharpness(p.risk_beta))
     return _pgd_ref.pgd_step_arrays(delta, p.eta, p.pi, p.pow_nom, tau24,
                                     peak_price, lo, ub, lr, temp,
                                     p.lambda_e)
@@ -144,7 +173,17 @@ def solve_vcc(p: VCCProblem, *, inner_iters: int = 80, outer_iters: int = 20,
     with the fleet-wide kernel convention: ``use_pallas=None`` auto-selects
     the Pallas kernel on TPU and the jnp oracle elsewhere; ``interpret=True``
     exercises the kernel through the Pallas interpreter on CPU (tests).
+
+    Ensemble problems (K members attached via ``risk.attach_ensemble``)
+    descend the soft-CVaR member tilt in the same epoch; a K=1 ensemble is
+    statically collapsed to the point-forecast problem, so the degenerate
+    risk path traces the EXACT legacy graph (bitwise contract, tested).
+    ``VCCSolution.objective`` is always the nominal eq. 4 cost of the
+    chosen delta (comparable across risk settings; the risk value is
+    ``risk.cvar_objective``).
     """
+    if p.eta_ens is not None and p.eta_ens.shape[0] == 1:
+        p = dataclasses.replace(p, eta_ens=None, pow_nom_ens=None)
     n, H = p.eta.shape
     lo, ub, feasible = delta_bounds(p)
     # neutralize infeasible clusters: bounds collapse to {0}
@@ -187,13 +226,40 @@ def solve_vcc(p: VCCProblem, *, inner_iters: int = 80, outer_iters: int = 20,
                     jnp.minimum(vcc_shaped, p.capacity[:, None]),
                     p.capacity[:, None])
     return VCCSolution(delta=delta, y=y, vcc=vcc, shaped=feasible, mu=mu,
-                       objective=objective(p, delta, mu))
+                       objective=objective(p, delta, mu, risk=False))
 
 
 def solve_vcc_batched(p: VCCProblem, **kw) -> VCCSolution:
     """vmap solve_vcc over a leading (scenario x seed) axis of a stacked
     VCCProblem (requires the pytree registration above)."""
     return jax.vmap(lambda q: solve_vcc(q, **kw))(p)
+
+
+def synthetic_problem(n: int = 12, seed: int = 7, n_campuses: int = 2
+                      ) -> VCCProblem:
+    """The canonical synthetic fleetwide problem shared by the parity
+    tests (tests/test_stages_parity.py, tests/test_risk.py) and the
+    solve-cost benchmark probe (benchmarks/sim_bench.py): a diurnal
+    intensity curve + noisy inflexible load with uncontended campus
+    limits and drop_limit=1.0. ONE recipe so the benchmarked problem can
+    never drift from the tested one."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    H = 24
+    eta = jnp.abs(0.3 + 0.25 * jnp.sin(jnp.linspace(0, 2 * jnp.pi, H))[None]
+                  + 0.05 * jax.random.normal(ks[0], (n, H)))
+    u_if = 0.4 + 0.05 * jax.random.normal(ks[1], (n, H))
+    tau = 2.0 + 3.0 * jax.random.uniform(ks[2], (n,))
+    pow_nom = 500.0 + 20.0 * jax.random.normal(ks[3], (n, H))
+    import numpy as np
+    return VCCProblem(
+        eta=eta, u_if=u_if, u_if_q=u_if * 1.1, tau=tau,
+        pow_nom=pow_nom, pi=jnp.full((n, H), 300.0),
+        u_pow_cap=jnp.full((n,), 0.95), capacity=jnp.full((n,), 1.3),
+        ratio=jnp.full((n, H), 1.3),
+        campus=jnp.asarray(np.arange(n) % n_campuses, jnp.int32),
+        campus_limit=jnp.full((n_campuses,), 1e9),
+        lambda_e=0.1, lambda_p=0.05, drop_limit=1.0)
 
 
 # ------------------------------------------------- exact greedy reference

@@ -26,6 +26,27 @@ from jax.experimental import pallas as pl
 DEFAULT_TILE = 256
 
 
+def _project_rows(z, lo, ub, proj_iters):
+    """Shared in-VMEM bisection projection onto {sum_h = 0} ∩ [lo, ub]
+    (same math as ref.project_row; rows independent). The ONE copy both
+    kernels call — the identical-members bitwise contract between the
+    plain and ensemble epochs rides on them projecting identically."""
+    a = jnp.min(z, 1) - jnp.max(ub, 1)
+    b = jnp.max(z, 1) - jnp.min(lo, 1)
+
+    def pbody(i, ab):
+        a, b = ab
+        m = 0.5 * (a + b)
+        f = jnp.sum(jnp.clip(z - m[:, None], lo, ub), axis=1)
+        a = jnp.where(f > 0, m, a)
+        b = jnp.where(f > 0, b, m)
+        return a, b
+
+    a, b = jax.lax.fori_loop(0, proj_iters, pbody, (a, b))
+    nu = 0.5 * (a + b)
+    return jnp.clip(z - nu[:, None], lo, ub)
+
+
 def _pgd_kernel(delta_ref, eta_ref, pi_ref, pow_ref, tau_ref, price_ref,
                 lo_ref, ub_ref, lr_ref, temp_ref, lame_ref, out_ref, *,
                 iters, proj_iters):
@@ -41,22 +62,6 @@ def _pgd_kernel(delta_ref, eta_ref, pi_ref, pow_ref, tau_ref, price_ref,
     temp = temp_ref[...].astype(jnp.float32)          # (TC, 1) broadcast
     lambda_e = lame_ref[...].astype(jnp.float32)      # (TC, 1) broadcast
 
-    def project(z):
-        a = jnp.min(z, 1) - jnp.max(ub, 1)
-        b = jnp.max(z, 1) - jnp.min(lo, 1)
-
-        def pbody(i, ab):
-            a, b = ab
-            m = 0.5 * (a + b)
-            f = jnp.sum(jnp.clip(z - m[:, None], lo, ub), axis=1)
-            a = jnp.where(f > 0, m, a)
-            b = jnp.where(f > 0, b, m)
-            return a, b
-
-        a, b = jax.lax.fori_loop(0, proj_iters, pbody, (a, b))
-        nu = 0.5 * (a + b)
-        return jnp.clip(z - nu[:, None], lo, ub)
-
     def body(i, d):
         pow_h = pow_nom + pi * d * tau24
         s = pow_h / temp
@@ -64,7 +69,51 @@ def _pgd_kernel(delta_ref, eta_ref, pi_ref, pow_ref, tau_ref, price_ref,
         e = jnp.exp(s)
         w = e / jnp.sum(e, axis=1, keepdims=True)
         grad = (lambda_e * eta + price * w) * pi * tau24
-        return project(d - lr * grad)
+        return _project_rows(d - lr * grad, lo, ub, proj_iters)
+
+    out_ref[...] = jax.lax.fori_loop(0, iters, body, delta).astype(
+        out_ref.dtype)
+
+
+def _pgd_ens_kernel(delta_ref, eta_ref, pi_ref, pow_ref, tau_ref, price_ref,
+                    lo_ref, ub_ref, lr_ref, temp_ref, lame_ref, risk_ref,
+                    out_ref, *, iters, proj_iters):
+    """CVaR ensemble epoch: blocks carry a (K, TC, H) member tile of
+    eta/pow_nom; the member axis is reduced IN-KERNEL (per-cluster
+    soft-CVaR tilt, anchored on member 0 — mirrors ref.pgd_step_ens_arrays
+    op for op, so identical members collapse bitwise)."""
+    delta = delta_ref[...].astype(jnp.float32)          # (TC, H)
+    eta_e = eta_ref[...].astype(jnp.float32)            # (K, TC, H)
+    pi = pi_ref[...].astype(jnp.float32)
+    pow_e = pow_ref[...].astype(jnp.float32)            # (K, TC, H)
+    tau24 = tau_ref[...].astype(jnp.float32)            # (TC, 1)
+    price = price_ref[...].astype(jnp.float32)
+    lo = lo_ref[...].astype(jnp.float32)
+    ub = ub_ref[...].astype(jnp.float32)
+    lr = lr_ref[...].astype(jnp.float32)
+    temp = temp_ref[...].astype(jnp.float32)            # (TC, 1) broadcast
+    lambda_e = lame_ref[...].astype(jnp.float32)        # (TC, 1) broadcast
+    risk_s = risk_ref[...].astype(jnp.float32)          # (TC, 1) broadcast
+
+    def body(i, d):
+        ph = pow_e + (pi * d * tau24)[None]             # (K, TC, H)
+        s = ph / temp[None]
+        s = s - jnp.max(s, axis=-1, keepdims=True)
+        e = jnp.exp(s)
+        w_peak = e / jnp.sum(e, axis=-1, keepdims=True)
+        cost = lambda_e[..., 0][None] * jnp.sum(eta_e * ph, axis=-1) \
+            + price[..., 0][None] * jnp.sum(w_peak * ph, axis=-1)  # (K, TC)
+        z = cost - cost[:1]
+        dev = cost - jnp.mean(cost, axis=0, keepdims=True)
+        scale = jnp.mean(jnp.abs(dev), axis=0, keepdims=True) + 1e-9
+        t = risk_s[..., 0][None] * z / scale
+        t = t - jnp.max(t, axis=0, keepdims=True)
+        et = jnp.exp(t)
+        wm = (et / jnp.sum(et, axis=0, keepdims=True))[..., None]
+        eta_w = eta_e[0] + jnp.sum(wm * (eta_e - eta_e[:1]), axis=0)
+        w_w = w_peak[0] + jnp.sum(wm * (w_peak - w_peak[:1]), axis=0)
+        grad = (lambda_e * eta_w + price * w_w) * pi * tau24
+        return _project_rows(d - lr * grad, lo, ub, proj_iters)
 
     out_ref[...] = jax.lax.fori_loop(0, iters, body, delta).astype(
         out_ref.dtype)
@@ -98,6 +147,55 @@ def pgd_epoch_pallas(delta, eta, pi, pow_nom, tau24, price, lo, ub, lr, *,
         grid=(nt,),
         in_specs=[wide, wide, wide, wide, slim, slim, wide, wide, slim,
                   slim, slim],
+        out_specs=wide,
+        out_shape=jax.ShapeDtypeStruct((n + pad, H), delta.dtype),
+        interpret=interpret,
+    )(*args)
+    return out[:n]
+
+
+ENS_TILE = 64     # smaller cluster tile: each block also carries K members
+
+
+def pgd_epoch_ens_pallas(delta, eta_e, pi, pow_nom_e, tau24, price, lo, ub,
+                         lr, *, temp, lambda_e, risk_s, iters: int,
+                         proj_iters: int = 50, tile: int = ENS_TILE,
+                         interpret: bool = False):
+    """CVaR ensemble epoch. eta_e/pow_nom_e: (K, n, H) member stacks;
+    the rest as in ``pgd_epoch_pallas``; ``risk_s`` scalar (float or
+    traced) soft-CVaR sharpness (0 = risk-neutral). The grid tiles the
+    cluster axis only — every block loads its full K-member slab into VMEM
+    and reduces the member axis in-kernel (K x (tile, H) fits VMEM for the
+    sweep sizes K <= 32, tile = 64)."""
+    K, n, H = eta_e.shape
+    tile = min(tile, n)
+    pad = (-n) % tile
+
+    def p2(x):
+        return jnp.pad(x, ((0, pad), (0, 0)))
+
+    def p3(x):
+        return jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+
+    def scal(v, fill=0.0):
+        a = jnp.broadcast_to(jnp.asarray(v, jnp.float32), (n, 1))
+        return jnp.pad(a, ((0, pad), (0, 0)), constant_values=fill)
+
+    args = [p2(delta), p3(eta_e), p2(pi), p3(pow_nom_e), p2(tau24),
+            p2(price), p2(lo), p2(ub), p2(lr),
+            scal(temp, fill=1.0),      # body divides by temp in dead rows
+            scal(lambda_e), scal(risk_s)]
+    nt = (n + pad) // tile
+    kernel = functools.partial(_pgd_ens_kernel, iters=iters,
+                               proj_iters=proj_iters)
+    wide = pl.BlockSpec((tile, H), lambda i: (i, 0))
+    slim = pl.BlockSpec((tile, 1), lambda i: (i, 0))
+    ens = pl.BlockSpec((K, tile, H), lambda i: (0, i, 0))
+    out = pl.pallas_call(
+        kernel,
+        grid=(nt,),
+        in_specs=[wide, ens, wide, ens, slim, slim, wide, wide, slim,
+                  slim, slim, slim],
         out_specs=wide,
         out_shape=jax.ShapeDtypeStruct((n + pad, H), delta.dtype),
         interpret=interpret,

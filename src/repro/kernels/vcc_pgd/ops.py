@@ -28,7 +28,10 @@ def pgd_epoch(prob, delta, mu, lo, ub, lr_eff, temp, iters,
     """Adapter from a repro.core.vcc.VCCProblem to the kernel layout.
 
     ``temp`` and ``prob.lambda_e`` may be traced scalars (the day cycle
-    computes temp from the problem inside jit/vmap).
+    computes temp from the problem inside jit/vmap). Problems carrying
+    ensemble axes (``prob.eta_ens``/``prob.pow_nom_ens`` not None, K > 1)
+    route to the CVaR ensemble epoch, which reduces the member axis
+    in-kernel; plain problems keep the exact legacy epoch graph.
     """
     tau24 = (prob.tau[:, None] / 24.0).astype(jnp.float32)
     price = (prob.lambda_p + mu[prob.campus])[:, None].astype(jnp.float32)
@@ -38,6 +41,16 @@ def pgd_epoch(prob, delta, mu, lo, ub, lr_eff, temp, iters,
     kw = dict(temp=temp, lambda_e=prob.lambda_e, iters=int(iters))
     if use_pallas is None:
         use_pallas = _tpu_available()
+    if getattr(prob, "eta_ens", None) is not None:
+        kw["risk_s"] = _ref.cvar_sharpness(prob.risk_beta)
+        if use_pallas or interpret:
+            from repro.kernels.vcc_pgd import kernel as _kernel
+            return _kernel.pgd_epoch_ens_pallas(
+                delta, prob.eta_ens, prob.pi, prob.pow_nom_ens, tau24,
+                price, lo, ub, lr, interpret=interpret, **kw)
+        return _ref.pgd_epoch_ens_ref(delta, prob.eta_ens, prob.pi,
+                                      prob.pow_nom_ens, tau24, price, lo,
+                                      ub, lr, **kw)
     if use_pallas or interpret:
         from repro.kernels.vcc_pgd import kernel as _kernel
         return _kernel.pgd_epoch_pallas(

@@ -55,11 +55,15 @@ class SimConfig:
     slo_margin: float = 1.0
     slo_pause_days: int = 7
     spatial_iters: int = 100      # spatial pre-shift PGD iterations
+    n_members: int = 1            # forecast-ensemble size K (static shape;
+    #                               K > 1 turns on the CVaR risk objective
+    #                               at each scenario's risk_beta)
 
     def stage_config(self) -> stages.StageConfig:
         return stages.StageConfig(slo_margin=self.slo_margin,
                                   slo_pause_days=self.slo_pause_days,
-                                  spatial_iters=self.spatial_iters)
+                                  spatial_iters=self.spatial_iters,
+                                  n_members=self.n_members)
 
 
 def _metrics(res, cf) -> DayMetrics:

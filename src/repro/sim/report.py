@@ -33,6 +33,28 @@ def scenario_rows(ledgers: Ledger, scenario_names: Sequence[str],
     return rows
 
 
+RISK_COLUMNS = ("carbon_saved_pct", "flex_completion_pct",
+                "flex_within_24h_pct", "delayed_cpu_h_per_day")
+
+
+def risk_sweep_rows(ledgers_by_k: Dict[int, "Ledger"],
+                    scenario_names: Sequence[str], n_seeds: int
+                    ) -> List[Dict[str, float]]:
+    """Flatten a {n_members: batched Ledger} sweep (one batch per ensemble
+    size K, each batch = the risk_sweep_library beta axis x seeds) into
+    rows tagged with an ``n_members`` field — the carbon vs
+    flex-completion risk trade-off data, consumed by both the bench JSON
+    and the example table. Data only: prefix ``scenario`` with the K for
+    display (see examples/scenario_sweep.py) before ``format_table(rows,
+    RISK_COLUMNS)``."""
+    rows: List[Dict[str, float]] = []
+    for k, led in sorted(ledgers_by_k.items()):
+        for r in scenario_rows(led, scenario_names, n_seeds):
+            r["n_members"] = k
+            rows.append(r)
+    return rows
+
+
 def format_table(rows: List[Dict[str, float]],
                  columns: Sequence[str] = COLUMNS) -> str:
     """Fixed-width ASCII table: one line per scenario."""
@@ -40,6 +62,7 @@ def format_table(rows: List[Dict[str, float]],
     headers = {"carbon_saved_pct": "carbonSaved%",
                "peak_reduction_pct": "peakRed%",
                "flex_within_24h_pct": "flex<24h%",
+               "flex_completion_pct": "flexDone%",
                "kwh_saved_pct": "kwhSaved%",
                "delayed_cpu_h_per_day": "delayedCPUh/d"}
     cols = [headers.get(c, c) for c in columns]

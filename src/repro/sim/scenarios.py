@@ -121,6 +121,8 @@ class Scenario:
     lambda_p: float = 0.05
     gamma: float = 0.05          # power-capping violation probability
     mobility: float = 0.0        # spatial-shift mobility (0 = paper mode)
+    risk_beta: float = 1.0       # CVaR tail fraction (1.0 = risk-neutral;
+    #                              only acts when SimConfig.n_members > 1)
 
 
 def _scenario_rng(scenario: Scenario, seed: int) -> np.random.Generator:
@@ -157,6 +159,7 @@ def build_params(cfg: SimConfig, scenario: Scenario, seed: int, days: int
         lambda_p=jnp.asarray(scenario.lambda_p, f32),
         gamma=jnp.asarray(scenario.gamma, f32),
         mobility=jnp.asarray(scenario.mobility, f32),
+        risk_beta=jnp.asarray(scenario.risk_beta, f32),
         green_scale=jnp.asarray(sched["green_scale"], f32),
         coal_scale=jnp.asarray(sched["coal_scale"], f32),
         cap_scale=jnp.asarray(sched["cap_scale"], f32),
@@ -217,4 +220,33 @@ def default_library(days: int = 14) -> List[Scenario]:
                   ClusterOutage(start=half, length=max(days // 4, 1),
                                 frac=0.2),
                   DemandSurge(start=half, scale=1.4))),
+    ]
+
+
+RISK_BETAS = (0.5, 0.9, 0.99)
+RISK_MEMBERS = (1, 8, 32)
+
+
+def risk_sweep_library(days: int = 14,
+                       betas: Sequence[float] = RISK_BETAS
+                       ) -> List[Scenario]:
+    """The risk-sweep scenario family: CVaR tail fraction beta swept under
+    a forecast-hostile backdrop (drought + demand surge — the regimes
+    'Let's Wait Awhile' shows are most forecast-error sensitive).
+
+    beta is a data leaf, so the whole sweep batches in ONE rollout; the
+    ensemble size K is a static shape, so pair this library with
+    ``SimConfig(n_members=K)`` for each K in ``RISK_MEMBERS`` (K=1 makes
+    every beta collapse to the identical point-forecast path — the
+    degenerate control row).
+    """
+    half = max(days // 2, 1)
+    backdrop = (RenewableDrought(start=half, depth=0.6),
+                DemandSurge(start=half, scale=1.4))
+    return [
+        Scenario(f"risk_beta{int(round(100 * b)):02d}",
+                 f"CVaR beta={b}: optimize the worst {b:.0%} of forecast "
+                 "members under drought + surge",
+                 backdrop, lambda_e=1.0, risk_beta=b)
+        for b in betas
     ]

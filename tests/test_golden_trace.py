@@ -1,0 +1,75 @@
+"""Golden-trace regression: a frozen 3-day, 8-cluster `rollout_batch`
+rollout must reproduce BITWISE on CPU.
+
+PR 2's refactor safety net was transient legacy==engine parity — two
+adapters over the same staged core agree, but BOTH can drift together
+(and the legacy adapters may eventually go away). This trace pins the
+absolute numbers: any change to the staged day cycle, the batched engine,
+or the batch-invariant numerics that shifts a single bit of the default
+(n_members=1) path fails here and must either be a bug or consciously
+regenerate the trace:
+
+    PYTHONPATH=src python tests/test_golden_trace.py
+
+The freeze is CPU-only (the bitwise contract is per-backend; TPU/GPU
+rounding differs by design) and covers the ledger, the per-day trajectory,
+and the carried final state. Scenarios exercise both a perturbation-free
+baseline and a price override.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.sim import SimConfig, Scenario, build_batch, rollout_batch
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden", "day3.npz")
+
+CFG = SimConfig(n_clusters=8, n_campuses=2, n_zones=2, pds_per_cluster=2,
+                hist_days=14)
+DAYS = 3
+SCENARIOS = (Scenario("baseline", "nominal grid, nominal fleet"),
+             Scenario("high_carbon_price", "lambda_e x4", lambda_e=2.0))
+SEEDS = (0, 1)
+
+
+def golden_rollout():
+    """The frozen configuration: 2 scenarios x 2 seeds x 3 days."""
+    batch = build_batch(CFG, list(SCENARIOS), list(SEEDS), DAYS)
+    state, ledger, traj = rollout_batch(CFG, DAYS)(batch)
+    out = {}
+    for name, val in ledger._asdict().items():
+        out[f"ledger_{name}"] = np.asarray(val)
+    for name, val in traj.items():
+        out[f"traj_{name}"] = np.asarray(val)
+    for name in ("queue", "cf_queue", "hist_flex_daily", "hist_res_daily",
+                 "carbon_hist", "shaping_allowed", "pause_left"):
+        out[f"state_{name}"] = np.asarray(getattr(state, name))
+    return out
+
+
+@pytest.mark.skipif(jax.default_backend() != "cpu",
+                    reason="golden trace is frozen on CPU numerics; other "
+                           "backends round differently by design")
+def test_day3_rollout_matches_golden_trace():
+    assert os.path.exists(GOLDEN), \
+        f"{GOLDEN} missing — regenerate with " \
+        "`PYTHONPATH=src python tests/test_golden_trace.py`"
+    want = np.load(GOLDEN)
+    got = golden_rollout()
+    assert set(want.files) == set(got), \
+        f"golden key set changed: {sorted(set(want.files) ^ set(got))}"
+    for name in want.files:
+        np.testing.assert_array_equal(
+            want[name], got[name],
+            err_msg=f"{name} drifted from tests/golden/day3.npz — if the "
+                    "day cycle changed on purpose, regenerate the trace")
+
+
+if __name__ == "__main__":
+    os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+    np.savez_compressed(GOLDEN, **golden_rollout())
+    print(f"wrote {GOLDEN}:")
+    for k, v in np.load(GOLDEN).items():
+        print(f"  {k}: {v.shape} {v.dtype}")

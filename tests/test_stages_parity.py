@@ -95,23 +95,8 @@ def test_day_cycle_matches_engine_day_step(engine_side, fleet_side):
         assert int(st.day) == int(s.day)
 
 
-def _vcc_problem(n=12, seed=7):
-    key = jax.random.PRNGKey(seed)
-    ks = jax.random.split(key, 4)
-    H = 24
-    eta = jnp.abs(0.3 + 0.25 * jnp.sin(jnp.linspace(0, 2 * jnp.pi, H))[None]
-                  + 0.05 * jax.random.normal(ks[0], (n, H)))
-    u_if = 0.4 + 0.05 * jax.random.normal(ks[1], (n, H))
-    tau = 2.0 + 3.0 * jax.random.uniform(ks[2], (n,))
-    pow_nom = 500.0 + 20.0 * jax.random.normal(ks[3], (n, H))
-    return vcc.VCCProblem(
-        eta=eta, u_if=u_if, u_if_q=u_if * 1.1, tau=tau,
-        pow_nom=pow_nom, pi=jnp.full((n, H), 300.0),
-        u_pow_cap=jnp.full((n,), 0.95), capacity=jnp.full((n,), 1.3),
-        ratio=jnp.full((n, H), 1.3),
-        campus=jnp.asarray(np.arange(n) % 2, jnp.int32),
-        campus_limit=jnp.full((2,), 1e9),
-        lambda_e=0.1, lambda_p=0.05, drop_limit=1.0)
+# the shared synthetic recipe (identical arrays to the old inline copy)
+_vcc_problem = vcc.synthetic_problem
 
 
 def test_solve_vcc_interpret_kernel_matches_ref():
