@@ -16,8 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row, timeit
-from repro.core import carbon, fleet as F, forecast, power, slo
+from repro.core import carbon, fleet as F, power, slo
 
 
 def _fleet(n_clusters=16, days=10, seed=1, lambda_e=0.5):
@@ -130,7 +129,6 @@ def fig12_controlled_experiment(n_clusters=16, days=12, seed=5):
     rng = np.random.RandomState(0)
     treated_power, control_power = [], []
     for d in range(days):
-        rec = {}
         treat = jnp.asarray(rng.rand(n_clusters) < 0.5)
         # shape only the treated clusters this day
         power_fn, slope_fn, _ = F.make_power_fn(st)
@@ -186,7 +184,6 @@ def power_model_mape(seed=0, n_pd=64):
 
 def carbon_forecast_mape(days=40):
     zones = carbon.default_zones(6)
-    out = []
     mapes = []
     for i, z in enumerate(zones):
         key = jax.random.PRNGKey(100 + i)
@@ -206,7 +203,6 @@ def carbon_forecast_mape(days=40):
 
 def run():
     rows = []
-    t0 = time.perf_counter()
     cfg, st, recs = _fleet()
     cyc = np.mean([r["wall_s"] for r in recs])
     rows.append(("fleet_day_cycle_wall_s", cyc * 1e6 / 1e6,

@@ -1,6 +1,5 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
 # CSV rows (us_per_call doubles as the metric value for non-timing rows).
-import sys
 import time
 
 

@@ -7,21 +7,31 @@ core/fleet.py, plus a legacy-vs-engine drift probe (both paths run the
 same staged day step, so drift must be ~0), the per-scenario summary
 rows, the K=8 CVaR ensemble solve cost relative to the K=1 point-forecast
 solve (the member axis is vmapped/kernel-reduced, so the target is << Kx),
-and the risk-sweep (beta) trade-off rows. Registered in run.py; also a
-CLI:
+the risk-sweep (beta) trade-off rows, the joint spatio-temporal solve
+cost relative to the temporal-only solve plus its carbon edge over the
+sequential pre-shift (`joint_solve_cost_ratio` / `joint_carbon_delta_pct`),
+and the mobility-sweep rows (joint vs sequential rollouts of the same
+batch). Registered in run.py; also a CLI:
 
     PYTHONPATH=src python -m benchmarks.sim_bench [--quick] [--out PATH]
 
 ``--quick`` runs a small CI smoke configuration and FAILS (exit 1) if the
 batched engine loses its throughput edge over the legacy loop, if the
 legacy and engine paths drift apart, if the K=8 ensemble solve costs
->= 4x the K=1 solve, or if the per-member ensemble throughput regresses
->1.5x against the committed BENCH_sim.json baseline — the regression
-tripwires the CI workflow runs on every push.
+>= 4x the K=1 solve, if the per-member ensemble throughput regresses
+>1.5x against the committed BENCH_sim.json baseline, if the joint
+spatio-temporal solve costs >= 3x the temporal-only solve, or if the
+joint optimizer's carbon is worse than the sequential pre-shift
+(solver-level: exact gate, the best-of safeguard makes plan-level
+dominance structural; rollout-level: a generous tripwire per
+mobility-sweep row, since REALIZED carbon after sampled load can wiggle
+either way) — the regression tripwires the CI workflow runs on every
+push.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import sys
 import time
@@ -32,9 +42,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fleet as F
-from repro.core import risk, vcc
+from repro.core import risk, spatial, vcc
 from repro.sim import (SimConfig, Scenario, build_batch, build_params,
                        default_library, make_day_step, make_init,
+                       mobility_sweep_library, mobility_sweep_rows,
                        risk_sweep_library, risk_sweep_rows, rollout_batch,
                        rollout_batch_sharded, scenario_rows)
 from repro.sim.engine import _day_xs
@@ -149,6 +160,77 @@ def _ensemble_solve_cost(n_clusters=256, n_members=8, reps=5):
     }
 
 
+def _joint_solve_cost(n_clusters=256, mobility=0.3, reps=5):
+    """Wall-time of the joint spatio-temporal solve vs the temporal-only
+    solve (jitted; min over ``reps`` steady-state calls), plus the
+    model-consistent carbon edge over the sequential pre-shift. The joint
+    solve CONTAINS a sequential warm start + the joint refinement, so the
+    ratio's floor is ~1; the CI gate caps it at 3x. Carbon delta >= 0 is
+    structural (best-of safeguard in ``spatial.solve_joint``). The
+    problem is ``vcc.synthetic_zonal_problem`` — the SAME zonal recipe
+    the joint tests solve (one recipe, no drift)."""
+    p = vcc.synthetic_zonal_problem(n_clusters, seed=13, n_campuses=4)
+
+    f_t = jax.jit(lambda q: vcc.solve_vcc(q, use_pallas=False).delta)
+    f_j = jax.jit(lambda q: spatial.solve_joint(q, mobility,
+                                                use_pallas=False))
+
+    def timed(f, arg):
+        jax.block_until_ready(f(arg))            # compile + warm
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(arg))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_temporal = timed(f_t, p)
+    t_joint = timed(f_j, p)
+    sol_j, _, s_j = f_j(p)
+    # sequential two-phase baseline, evaluated on the SAME joint-consistent
+    # carbon model (incl. the pi*s/24 baseline term it ignores)
+    tau_sh, _ = spatial.spatial_shift(p, mobility=mobility)
+    sol_seq = vcc.solve_vcc(dataclasses.replace(p, tau=tau_sh),
+                            use_pallas=False)
+    s0 = tau_sh - p.tau
+    c_joint = float(spatial.joint_carbon(p, sol_j.delta, s_j))
+    c_seq = float(spatial.joint_carbon(p, sol_seq.delta, s0))
+    return {
+        "joint_temporal_solve_ms": 1e3 * t_temporal,
+        "joint_solve_ms": 1e3 * t_joint,
+        "joint_solve_cost_ratio": t_joint / t_temporal,
+        "joint_carbon_kg": c_joint,
+        "joint_sequential_carbon_kg": c_seq,
+        # > 0 = joint emits less than the sequential pre-shift
+        "joint_carbon_delta_pct": 100.0 * (c_seq - c_joint)
+        / max(abs(c_seq), 1e-9),
+    }
+
+
+def _mobility_sweep_rows(n_clusters=6, days=7, n_seeds=2, hist_days=14,
+                         mobilities=None):
+    """The mobility-sweep family through the engine, twice over the same
+    (scenario x seed) batch: joint_spatial=True vs False. Rows carry the
+    rollout-level joint-vs-sequential carbon delta
+    (``carbon_vs_sequential_pct``; the quick gate tripwires only on
+    substantial negatives — realized carbon is noisy, plan-level
+    dominance is gated exactly at the solver probe)."""
+    kw = {} if mobilities is None else {"mobilities": mobilities}
+    scens = mobility_sweep_library(days, **kw)
+    seeds = list(range(n_seeds))
+    ledgers = {}
+    for joint in (True, False):
+        cfg = SimConfig(n_clusters=n_clusters, n_campuses=2, n_zones=2,
+                        pds_per_cluster=2, hist_days=hist_days,
+                        joint_spatial=joint)
+        batch = build_batch(cfg, scens, seeds, days)
+        _, led, _ = rollout_batch(cfg, days)(batch)
+        jax.block_until_ready(led)
+        ledgers[joint] = led
+    return mobility_sweep_rows(ledgers[True], ledgers[False],
+                               [s.name for s in scens], n_seeds)
+
+
 def _risk_sweep_rows(n_clusters=6, days=4, members=(1, 8), n_seeds=2,
                      hist_days=14):
     """The risk-sweep family (beta axis batched, K static: one compiled
@@ -182,9 +264,13 @@ def run(quick: bool = False, out_path: Path = None):
         # same problem size and reps as the full run: the cost-ratio gate
         # compares against the committed BENCH_sim.json baseline
         ens_kw = dict()
+        joint_kw = dict()
         risk_kw = dict(n_clusters=4, days=3, members=(8,), n_seeds=1)
+        mob_kw = dict(n_clusters=4, days=3, n_seeds=1,
+                      mobilities=(0.0, 0.3))
     else:
         legacy_kw, batch_kw, ens_kw, risk_kw = {}, {}, {}, {}
+        joint_kw, mob_kw = {}, {}
     base_dps, base_wall = _legacy_days_per_sec(**legacy_kw)
     (bat_dps, bat_wall, compile_wall, fleet_days,
      rows) = _batched_days_per_sec(**batch_kw)
@@ -192,7 +278,9 @@ def run(quick: bool = False, out_path: Path = None):
      _) = _batched_days_per_sec(sharded=True, **batch_kw)
     drift = _legacy_engine_drift()
     ens = _ensemble_solve_cost(**ens_kw)
+    joint = _joint_solve_cost(**joint_kw)
     risk_rows = _risk_sweep_rows(**risk_kw)
+    mob_rows = _mobility_sweep_rows(**mob_kw)
     speedup = bat_dps / base_dps
     rec = {
         "legacy_python_loop_days_per_sec": base_dps,
@@ -210,7 +298,9 @@ def run(quick: bool = False, out_path: Path = None):
         "quick": quick,
         "scenarios": rows,
         "risk_sweep": risk_rows,
+        "mobility_sweep": mob_rows,
         **ens,
+        **joint,
     }
     (out_path or BENCH_PATH).write_text(json.dumps(rec, indent=1))
     out = [
@@ -230,6 +320,13 @@ def run(quick: bool = False, out_path: Path = None):
          ens["ensemble_per_member_clusters_per_sec"],
          "member-cluster solves/sec (informational; the quick gate "
          "compares the machine-normalized cost ratio vs BENCH_sim.json)"),
+        ("sim_joint_solve_cost_ratio", joint["joint_solve_cost_ratio"],
+         f"joint spatio-temporal solve vs temporal-only "
+         f"({joint['joint_solve_ms']:.1f}ms vs "
+         f"{joint['joint_temporal_solve_ms']:.1f}ms); target < 3x"),
+        ("sim_joint_carbon_delta_pct", joint["joint_carbon_delta_pct"],
+         "carbon saved by joint vs sequential pre-shift (solver-level; "
+         ">= 0 structural via the best-of safeguard)"),
     ]
     for r in rows:
         out.append((f"sim_{r['scenario']}_carbon_saved_pct",
@@ -243,6 +340,12 @@ def run(quick: bool = False, out_path: Path = None):
                     f"K={r['n_members']} "
                     f"flexDone={r['flex_completion_pct']:.2f}% "
                     f"flex24h={r['flex_within_24h_pct']:.2f}%"))
+    for r in mob_rows:
+        out.append((f"sim_{r['scenario']}_joint_vs_seq_pct",
+                    r["carbon_vs_sequential_pct"],
+                    f"carbonSaved={r['carbon_saved_pct']:.2f}% "
+                    f"flex24h={r['flex_within_24h_pct']:.2f}% "
+                    "(rollout-level joint-vs-sequential carbon delta)"))
     return out
 
 
@@ -274,6 +377,30 @@ def main():
                 f"K=8 CVaR solve costs "
                 f"{by_name['sim_ensemble_solve_cost_ratio']:.2f}x the K=1 "
                 "solve (>= 4x: the member axis is no longer amortized)")
+        if by_name["sim_joint_solve_cost_ratio"] >= 3.0:
+            failures.append(
+                f"joint spatio-temporal solve costs "
+                f"{by_name['sim_joint_solve_cost_ratio']:.2f}x the "
+                "temporal-only solve (>= 3x)")
+        if by_name["sim_joint_carbon_delta_pct"] < -1e-6:
+            failures.append(
+                f"joint solve emits "
+                f"{-by_name['sim_joint_carbon_delta_pct']:.4f}% MORE carbon "
+                "than the sequential pre-shift (the best-of safeguard in "
+                "spatial.solve_joint is broken)")
+        for name, val, _ in rows:
+            # Rollout-level tripwire, NOT a structural property: the
+            # best-of safeguard guarantees plan-level dominance (gated
+            # exactly above via sim_joint_carbon_delta_pct), but realized
+            # carbon after sampled load + admission feedback can wiggle
+            # either way. A generous tolerance catches gross regressions
+            # (joint plans that systematically realize worse) without
+            # flaking on admission-path noise.
+            if name.endswith("_joint_vs_seq_pct") and val < -0.5:
+                failures.append(
+                    f"{name} = {val:.3f}%: joint rollouts emitted "
+                    "substantially more carbon than sequential pre-shift "
+                    "rollouts")
         if BENCH_PATH.exists():
             # Ratcheting per-member regression gate, machine-normalized:
             # the K=8-vs-K=1 cost ratio is a same-run relative measure,

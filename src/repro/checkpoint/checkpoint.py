@@ -20,7 +20,7 @@ import os
 import shutil
 import threading
 from pathlib import Path
-from typing import Any, Optional, Tuple
+from typing import Optional
 
 import jax
 import ml_dtypes

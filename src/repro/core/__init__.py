@@ -4,13 +4,16 @@ Pipelines (paper Fig. 4): carbon fetching (carbon.py), power models
 (power.py), load forecasting (forecast.py), risk-aware VCC optimization
 (vcc.py), forecast ensembles + CVaR risk objective (risk.py), SLO
 violation detection (slo.py), Borg-like admission under VCCs
-(admission.py), and the beyond-paper spatial shifting extension
-(spatial.py). ``stages.py`` composes them into THE staged day cycle (pure
-stage functions -> one pure day step) shared by both drivers; ``fleet.py``
-is the legacy mutable-FleetState adapter over it.
+(admission.py), and the beyond-paper spatial layer (spatial.py: greedy
+pre-shift + joint spatio-temporal optimization). Every optimizer is an
+assembly over the ONE generic projected-gradient layer (solver.py:
+projections, smooth peak, lr scaling, dual ascent, kernel-epoch
+dispatch). ``stages.py`` composes the pipelines into THE staged day cycle
+(pure stage functions -> one pure day step) shared by both drivers;
+``fleet.py`` is the legacy mutable-FleetState adapter over it.
 """
 from repro.core import (admission, carbon, fleet, forecast, power, risk,
-                        slo, spatial, stages, vcc)
+                        slo, solver, spatial, stages, vcc)
 
 __all__ = ["admission", "carbon", "fleet", "forecast", "power", "risk",
-           "slo", "spatial", "stages", "vcc"]
+           "slo", "solver", "spatial", "stages", "vcc"]

@@ -13,7 +13,6 @@ Vectorized across clusters; scanned over 24 hourly ticks.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -60,8 +59,6 @@ def run_day(vcc, u_if, arrivals, ratio, capacity, queue0, power_fn,
     vcc, u_if, arrivals, ratio: (n, 24); capacity: (n,); queue0: (n,)
     power_fn: (u_total (n,)) -> power kW (n,);  intensity: (n, 24).
     """
-    n = vcc.shape[0]
-
     def tick(queue, inp):
         vcc_h, uif_h, arr_h, r_h = inp
         # inflexible is always admitted (possibly beyond VCC — by design

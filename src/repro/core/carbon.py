@@ -11,7 +11,7 @@ All series are shaped (days, 24) or (zones, days, 24); hours are UTC.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Tuple
 
 import jax

@@ -32,6 +32,11 @@ Model
 Knobs: ``SimConfig.n_members`` / ``StageConfig.n_members`` set K (a static
 shape); ``Scenario.risk_beta`` -> ``SimParams.risk_beta`` sets beta (a data
 leaf, so scenario sweeps batch it). See README "Risk model".
+
+This module holds NO solver machinery of its own: the CVaR epoch is
+dispatched through ``repro.core.solver.pgd_epochs`` like every other PGD
+loop, and the member-tilt math lives with the kernels
+(``kernels.vcc_pgd.ref`` / the Pallas ensemble kernel).
 """
 from __future__ import annotations
 

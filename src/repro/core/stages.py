@@ -217,7 +217,12 @@ class StageConfig:
     cache). Shapes live in the state/params arrays, not here."""
     slo_margin: float = 1.0
     slo_pause_days: int = 7
-    spatial_iters: int = 100      # spatial pre-shift PGD iterations
+    joint_spatial: bool = False   # True = joint spatio-temporal optimize
+    #                               (spatial.solve_joint: delta and the
+    #                               budget shift s descended together);
+    #                               False = the paper-mode graph with the
+    #                               greedy spatial pre-shift (mobility=0
+    #                               makes the shift exactly zero)
     n_members: int = 1            # forecast-ensemble size K (1 = eq. 4
     #                               point-forecast path, graph unchanged;
     #                               K > 1 = CVaR over sampled realizations
@@ -362,22 +367,50 @@ def optimize_stage(cfg: StageConfig, fc, eta_fc, model: PowerModel, queue,
                    u_pow_cap, cap_day, campus, campus_limit, lambda_e,
                    lambda_p, mobility, ens: Optional[Dict] = None
                    ) -> Tuple[vcc.VCCProblem, vcc.VCCSolution]:
-    """Fleetwide risk-aware VCC optimization (+ optional spatial pre-shift;
-    mobility == 0 collapses the shift to exactly zero). The PGD inner loop
-    dispatches through kernels.vcc_pgd per cfg.use_pallas/interpret.
+    """Fleetwide risk-aware VCC optimization. The PGD machinery is the
+    ``core.solver`` layer throughout; kernels dispatch per
+    cfg.use_pallas/interpret.
+
+    Spatial flexibility (two statically selected graphs, keyed by
+    ``cfg.joint_spatial``):
+
+    * False (default) — the greedy spatial pre-shift runs before the
+      temporal solve; ``mobility == 0`` collapses the shift to exactly
+      zero, keeping that path bitwise-identical to the pre-joint day
+      cycle (golden-trace + parity contract; the trace's scenarios are
+      all mobility=0). For ``mobility > 0`` the pre-shift is now the
+      EXACT linear minimizer (``spatial.spatial_shift``) rather than a
+      truncated PGD loop — an intentional result change for
+      spatial-mobility scenarios.
+    * True — ``spatial.solve_joint``: the temporal deviations and the
+      daily budget shift are descended TOGETHER (bounds recomputed from
+      the shifted budgets inside the fused step), warm-started from and
+      never worse than the sequential two-phase answer.
 
     ``ens`` (the ``risk.day_ensembles`` dict, present iff cfg.n_members
-    > 1) attaches K forecast realizations AFTER the spatial pre-shift:
-    the solve then descends the soft-CVaR member tilt instead of the
-    point-forecast objective. With ens=None this graph is IDENTICAL to
-    the pre-ensemble day cycle (golden-trace + parity contract)."""
+    > 1) attaches K forecast realizations AFTER the budgets are placed:
+    the temporal solve then descends the soft-CVaR member tilt instead of
+    the point-forecast objective (under ``joint_spatial`` the joint solve
+    places the budgets on the point forecast, then the CVaR solve shapes
+    at the shifted budgets). With ens=None and joint_spatial=False this
+    graph is IDENTICAL to the pre-ensemble day cycle."""
     prob = build_problem_arrays(
         fc, eta_fc,
         lambda u: model_power(model, u), lambda u: model_slope(model, u),
         queue, u_pow_cap, cap_day, campus, campus_limit, lambda_e, lambda_p)
     prob = jax.lax.optimization_barrier(prob)
-    tau_shifted, _ = spatial.spatial_shift(prob, mobility=mobility,
-                                           iters=cfg.spatial_iters)
+    if cfg.joint_spatial:
+        sol, tau_j, _ = spatial.solve_joint(prob, mobility,
+                                            use_pallas=cfg.use_pallas,
+                                            interpret=cfg.interpret)
+        sol, tau_j = jax.lax.optimization_barrier((sol, tau_j))
+        prob = dataclasses.replace(prob, tau=tau_j)
+        if ens is not None:
+            prob = risk.attach_ensemble(prob, **ens)
+            sol = vcc.solve_vcc(prob, use_pallas=cfg.use_pallas,
+                                interpret=cfg.interpret)
+        return prob, sol
+    tau_shifted, _ = spatial.spatial_shift(prob, mobility=mobility)
     tau_shifted = jax.lax.optimization_barrier(tau_shifted)
     prob = dataclasses.replace(prob, tau=tau_shifted)
     if ens is not None:

@@ -15,9 +15,10 @@ subject to
 
 Solver: projected gradient on delta (the objective is linear + a smooth-max
 peak term), with an EXACT O(iter x n x 24) bisection projection onto
-{sum_h delta = 0} ∩ [lo, ub], and dual ascent on the campus coupling. The
-fused PGD step is the CICS fleet-scale hotspot and has a Pallas kernel
-(repro.kernels.vcc_pgd); this module is the jnp reference path.
+{sum_h delta = 0} ∩ [lo, ub], and dual ascent on the campus coupling — all
+assembled from the generic PGD pieces in ``repro.core.solver`` (this module
+keeps NO private solver machinery). The fused PGD step is the CICS
+fleet-scale hotspot and has a Pallas kernel (repro.kernels.vcc_pgd).
 
 Clusters whose bounds make shaping infeasible (too full / tau ~ 0) are
 excluded and get VCC = machine capacity (paper: ~10% of clusters per day).
@@ -31,7 +32,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.vcc_pgd import ref as _pgd_ref
+from repro.core import solver
 
 f32 = jnp.float32
 
@@ -112,22 +113,14 @@ def delta_bounds(p: VCCProblem):
     return lo, ub, feasible
 
 
-def project_conservation(z, lo, ub, iters: int = 50):
-    """Euclidean projection of each row onto {sum=0} ∩ [lo, ub] via
-    bisection on the shift nu: sum(clip(z - nu, lo, ub)) = 0. Single
-    implementation lives in the kernel package's jnp oracle."""
-    return _pgd_ref.project_row(z, lo, ub, iters)
+# the core-layer projection entry point (re-exported for the tests and
+# legacy import sites; repro.core.solver owns the machinery)
+project_conservation = solver.project_conservation
 
 
 def cluster_power(p: VCCProblem, delta):
     """Hourly power under delta (local linearization around nominal)."""
     return p.pow_nom + p.pi * delta * p.tau[:, None] / 24.0
-
-
-def smooth_peak(pow_h, temp):
-    """Differentiable softmax-peak and its weights. pow_h: (n, H)."""
-    w = jax.nn.softmax(pow_h / temp, axis=1)
-    return jnp.sum(w * pow_h, axis=1), w
 
 
 def objective(p: VCCProblem, delta, mu, *, risk: bool = True):
@@ -147,32 +140,18 @@ def objective(p: VCCProblem, delta, mu, *, risk: bool = True):
     return carbon + jnp.sum(peak_price * y)
 
 
-def pgd_step(p: VCCProblem, delta, mu, lo, ub, lr, temp):
-    """One projected-gradient step (the Pallas-kernelized hotspot).
-    Thin adapter over the kernel package's shared step — the same math the
-    Pallas kernel fuses in VMEM (no second jnp copy of the inner body).
-    Ensemble problems descend the soft-CVaR member tilt instead."""
-    tau24 = p.tau[:, None] / 24.0
-    peak_price = (p.lambda_p + mu[p.campus])[:, None]
-    if p.eta_ens is not None:
-        return _pgd_ref.pgd_step_ens_arrays(
-            delta, p.eta_ens, p.pi, p.pow_nom_ens, tau24, peak_price, lo,
-            ub, lr, temp, p.lambda_e, _pgd_ref.cvar_sharpness(p.risk_beta))
-    return _pgd_ref.pgd_step_arrays(delta, p.eta, p.pi, p.pow_nom, tau24,
-                                    peak_price, lo, ub, lr, temp,
-                                    p.lambda_e)
-
-
 def solve_vcc(p: VCCProblem, *, inner_iters: int = 80, outer_iters: int = 20,
               lr: float = 0.5, temp_frac: float = 0.02, rho: float = 0.2,
               use_pallas: Optional[bool] = None,
               interpret: bool = False) -> VCCSolution:
     """Solve the fleetwide VCC problem (eq. 4).
 
-    The inner PGD epoch dispatches through ``kernels.vcc_pgd.ops.pgd_epoch``
-    with the fleet-wide kernel convention: ``use_pallas=None`` auto-selects
-    the Pallas kernel on TPU and the jnp oracle elsewhere; ``interpret=True``
-    exercises the kernel through the Pallas interpreter on CPU (tests).
+    Assembly over ``repro.core.solver``: scaled-lr PGD epochs
+    (``solver.pgd_epochs`` — the fleet-wide kernel dispatch convention:
+    ``use_pallas=None`` auto-selects the Pallas kernel on TPU and the jnp
+    oracle elsewhere; ``interpret=True`` exercises the kernel through the
+    Pallas interpreter on CPU) inside ``solver.dual_ascent`` on the
+    campus power couplings.
 
     Ensemble problems (K members attached via ``risk.attach_ensemble``)
     descend the soft-CVaR member tilt in the same epoch; a K=1 ensemble is
@@ -189,36 +168,24 @@ def solve_vcc(p: VCCProblem, *, inner_iters: int = 80, outer_iters: int = 20,
     # neutralize infeasible clusters: bounds collapse to {0}
     lo = jnp.where(feasible[:, None], lo, 0.0)
     ub = jnp.where(feasible[:, None], ub, 0.0)
-    temp = temp_frac * jnp.clip(p.pow_nom.mean(), 1e-6, None)
+    temp = solver.peak_temperature(p.pow_nom, temp_frac)
     n_dc = p.campus_limit.shape[0]
-    # gradient scale varies per cluster: normalize lr by pi*tau/24
-    g_scale = jnp.clip((p.pi * p.tau[:, None] / 24.0).max(axis=1,
-                                                          keepdims=True),
-                       1e-9, None)
-    lr_eff = lr / (g_scale * jnp.clip(
-        p.lambda_e * p.eta.max(axis=1, keepdims=True) + p.lambda_p, 1e-9,
-        None))
-
-    from repro.kernels.vcc_pgd import ops as _k
+    lr_eff = solver.scaled_lr(lr, p.pi, p.tau, p.eta, p.lambda_e,
+                              p.lambda_p)
 
     def inner(delta, mu):
-        return _k.pgd_epoch(p, delta, mu, lo, ub, lr_eff, temp, inner_iters,
-                            use_pallas=use_pallas, interpret=interpret)
+        return solver.pgd_epochs(p, delta, mu, lo, ub, lr_eff, temp,
+                                 inner_iters, use_pallas=use_pallas,
+                                 interpret=interpret)
 
-    def outer(carry, _):
-        delta, mu = carry
-        delta = inner(delta, mu)
-        pow_h = cluster_power(p, delta)
-        y = pow_h.max(axis=1)
-        campus_pow = jax.ops.segment_sum(y, p.campus, num_segments=n_dc)
-        mu = jnp.clip(mu + rho * (campus_pow - p.campus_limit)
-                      / jnp.clip(p.campus_limit, 1e-9, None), 0.0, None)
-        return (delta, mu), None
+    def dual_update(delta, mu):
+        y = cluster_power(p, delta).max(axis=1)
+        return solver.campus_dual_update(mu, y, p.campus, p.campus_limit,
+                                         rho)
 
-    delta0 = jnp.zeros((n, H), f32)
-    mu0 = jnp.zeros((n_dc,), f32)
-    (delta, mu), _ = jax.lax.scan(outer, (delta0, mu0), None,
-                                  length=outer_iters)
+    delta, mu = solver.dual_ascent(inner, dual_update,
+                                   jnp.zeros((n, H), f32),
+                                   jnp.zeros((n_dc,), f32), outer_iters)
     pow_h = cluster_power(p, delta)
     y = pow_h.max(axis=1)
     vcc_shaped = (p.u_if + (1.0 + delta) * p.tau[:, None] / 24.0) * p.ratio
@@ -262,11 +229,28 @@ def synthetic_problem(n: int = 12, seed: int = 7, n_campuses: int = 2
         lambda_e=0.1, lambda_p=0.05, drop_limit=1.0)
 
 
+def synthetic_zonal_problem(n: int = 12, seed: int = 3,
+                            n_campuses: int = 2) -> VCCProblem:
+    """``synthetic_problem`` with a strong spatial carbon gradient
+    (alternating dirty/clean clusters) and tightened machine capacity, so
+    temporal shaping saturates in the dirty clusters and exporting budget
+    is what a spatial/joint optimizer can exploit. The ONE zonal recipe
+    shared by the joint tests (tests/test_joint.py) and the
+    joint-vs-sequential benchmark probe (benchmarks/sim_bench.py) — same
+    convention as ``synthetic_problem``: the benchmarked problem can
+    never drift from the tested one."""
+    p = synthetic_problem(n, seed=seed, n_campuses=n_campuses)
+    scale = jnp.where(jnp.arange(n) % 2 == 0, 2.2, 0.5)[:, None]
+    return dataclasses.replace(p, eta=p.eta * scale,
+                               capacity=p.capacity * 0.85)
+
+
 # ------------------------------------------------- exact greedy reference
 
-def greedy_linear_reference(eta_pi, lo, ub, iters_unused=None):
+def greedy_linear_reference(eta_pi, lo, ub):
     """Exact minimizer of sum_h c_h * delta_h with sum delta = 0, box
-    bounds, for ONE cluster (numpy-style; used to validate PGD in tests).
+    bounds, for ONE cluster (numpy-style; the independent oracle the tests
+    hold PGD and ``solver.minimize_linear`` against).
 
     Classic exchange argument: push delta to ub at the cheapest hours and lo
     at the most expensive, with one marginal hour balancing the budget.

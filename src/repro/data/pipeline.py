@@ -17,8 +17,6 @@ from dataclasses import dataclass
 from queue import Queue
 from typing import Dict, Iterator, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 

@@ -13,7 +13,6 @@ Validated with interpret=True against ref.gla_naive.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -154,6 +154,97 @@ def pgd_epoch_pallas(delta, eta, pi, pow_nom, tau24, price, lo, ub, lr, *,
     return out[:n]
 
 
+def _joint_kernel(d_ref, s_ref, eta_ref, pi_ref, pow_ref, tau_ref, uif_ref,
+                  uifq_ref, ratio_ref, upow_ref, cap_ref, price_ref, lr_ref,
+                  temp_ref, lame_ref, dout_ref, gs_ref, *, drop_limit,
+                  proj_iters):
+    """Fused joint spatio-temporal step (mirrors ref.joint_step_arrays op
+    for op): recompute the temporal bounds from the shifted budget
+    tau + s, take the linearized carbon + softmax-peak gradient at the
+    shifted point, project delta exactly, and emit the per-cluster shift
+    gradient. The fleet-coupled s projection (sum_c s = 0) happens
+    outside the cluster-tiled grid."""
+    d = d_ref[...].astype(jnp.float32)               # (TC, H)
+    s = s_ref[...].astype(jnp.float32)               # (TC, 1)
+    eta = eta_ref[...].astype(jnp.float32)
+    pi = pi_ref[...].astype(jnp.float32)
+    pow_nom = pow_ref[...].astype(jnp.float32)
+    tau = tau_ref[...].astype(jnp.float32)           # (TC, 1)
+    u_if = uif_ref[...].astype(jnp.float32)
+    u_if_q = uifq_ref[...].astype(jnp.float32)
+    ratio = ratio_ref[...].astype(jnp.float32)
+    u_pow_cap = upow_ref[...].astype(jnp.float32)    # (TC, 1)
+    capacity = cap_ref[...].astype(jnp.float32)      # (TC, 1)
+    price = price_ref[...].astype(jnp.float32)       # (TC, 1)
+    lr_d = lr_ref[...].astype(jnp.float32)           # (TC, 1)
+    temp = temp_ref[...].astype(jnp.float32)         # (TC, 1) broadcast
+    lambda_e = lame_ref[...].astype(jnp.float32)     # (TC, 1) broadcast
+
+    tau_s = tau + s
+    t24 = jnp.clip(tau_s / 24.0, 1e-9, None)
+    ub = jnp.minimum((u_pow_cap - u_if_q) / t24 - 1.0,
+                     (capacity / ratio - u_if) / t24 - 1.0)
+    ub = jnp.clip(ub, -drop_limit, 24.0)
+    feas = (jnp.sum(ub, axis=1, keepdims=True) >= 0.0) \
+        & (tau_s > 1e-6) \
+        & jnp.all(ub > -drop_limit + 1e-9, axis=1, keepdims=True)
+    lo = jnp.where(feas, jnp.full_like(ub, -drop_limit), 0.0)
+    ub = jnp.where(feas, ub, 0.0)
+
+    pow_h = pow_nom + pi * (d * tau_s + s) / 24.0
+    z = pow_h / temp
+    z = z - jnp.max(z, axis=1, keepdims=True)
+    e = jnp.exp(z)
+    w = e / jnp.sum(e, axis=1, keepdims=True)
+    gcoef = (lambda_e * eta + price * w) * pi
+    g_d = gcoef * (tau_s / 24.0)
+    g_s = jnp.sum(gcoef * (1.0 + d), axis=1, keepdims=True) / 24.0
+    d2 = _project_rows(d - lr_d * g_d, lo, ub, proj_iters)
+    dout_ref[...] = d2.astype(dout_ref.dtype)
+    gs_ref[...] = g_s.astype(gs_ref.dtype)
+
+
+def joint_step_pallas(delta, s, eta, pi, pow_nom, tau, u_if, u_if_q, ratio,
+                      u_pow_cap, capacity, price, lr_d, *, temp, lambda_e,
+                      drop_limit: float, proj_iters: int = 50,
+                      tile: int = DEFAULT_TILE, interpret: bool = False):
+    """Wide operands (n, H); slim operands (n, 1); temp/lambda_e scalar
+    (float or traced); drop_limit static. Returns (delta', g_s (n, 1))."""
+    n, H = delta.shape
+    tile = min(tile, n)
+    pad = (-n) % tile
+
+    def p2(x, fill=0.0):
+        return jnp.pad(x, ((0, pad), (0, 0)), constant_values=fill)
+
+    def scal(v, fill=0.0):
+        a = jnp.broadcast_to(jnp.asarray(v, jnp.float32), (n, 1))
+        return jnp.pad(a, ((0, pad), (0, 0)), constant_values=fill)
+
+    args = [p2(delta), p2(s), p2(eta), p2(pi), p2(pow_nom), p2(tau),
+            p2(u_if), p2(u_if_q),
+            p2(ratio, fill=1.0),       # dead rows divide by ratio
+            p2(u_pow_cap), p2(capacity), p2(price), p2(lr_d),
+            scal(temp, fill=1.0),      # dead rows divide by temp
+            scal(lambda_e)]
+    nt = (n + pad) // tile
+    kernel = functools.partial(_joint_kernel, drop_limit=drop_limit,
+                               proj_iters=proj_iters)
+    wide = pl.BlockSpec((tile, H), lambda i: (i, 0))
+    slim = pl.BlockSpec((tile, 1), lambda i: (i, 0))
+    d2, g_s = pl.pallas_call(
+        kernel,
+        grid=(nt,),
+        in_specs=[wide, slim, wide, wide, wide, slim, wide, wide, wide,
+                  slim, slim, slim, slim, slim, slim],
+        out_specs=(wide, slim),
+        out_shape=(jax.ShapeDtypeStruct((n + pad, H), delta.dtype),
+                   jax.ShapeDtypeStruct((n + pad, 1), jnp.float32)),
+        interpret=interpret,
+    )(*args)
+    return d2[:n], g_s[:n]
+
+
 ENS_TILE = 64     # smaller cluster tile: each block also carries K members
 
 

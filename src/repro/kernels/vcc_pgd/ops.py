@@ -58,3 +58,35 @@ def pgd_epoch(prob, delta, mu, lo, ub, lr_eff, temp, iters,
             lr, interpret=interpret, **kw)
     return _ref.pgd_epoch_ref(delta, prob.eta, prob.pi, prob.pow_nom, tau24,
                               price, lo, ub, lr, **kw)
+
+
+def joint_step(prob, delta, s, mu, lr_d, temp,
+               use_pallas: Optional[bool] = None, interpret: bool = False):
+    """One fused JOINT spatio-temporal step for a VCCProblem: temporal
+    bounds recomputed from the shifted budget tau + s, delta gradient +
+    exact projection, and the per-cluster shift gradient g_s (n, 1) as a
+    second output (the fleet-coupled s projection happens in
+    ``core.solver.joint_epochs``). Same dispatch convention as
+    ``pgd_epoch``; ``temp``/``prob.lambda_e`` may be traced scalars."""
+    f32 = jnp.float32
+    n = delta.shape[0]
+    price = (prob.lambda_p + mu[prob.campus])[:, None].astype(f32)
+    lr = jnp.broadcast_to(jnp.asarray(lr_d, f32), (n, 1)) \
+        if jnp.ndim(lr_d) < 2 else lr_d.astype(f32)
+    sv = s[:, None].astype(f32)
+    tau = prob.tau[:, None].astype(f32)
+    u_pow_cap = prob.u_pow_cap[:, None].astype(f32)
+    capacity = prob.capacity[:, None].astype(f32)
+    kw = dict(temp=temp, lambda_e=prob.lambda_e,
+              drop_limit=float(prob.drop_limit))
+    if use_pallas is None:
+        use_pallas = _tpu_available()
+    if use_pallas or interpret:
+        from repro.kernels.vcc_pgd import kernel as _kernel
+        return _kernel.joint_step_pallas(
+            delta, sv, prob.eta, prob.pi, prob.pow_nom, tau, prob.u_if,
+            prob.u_if_q, prob.ratio, u_pow_cap, capacity, price, lr,
+            interpret=interpret, **kw)
+    return _ref.joint_step_arrays(
+        delta, sv, prob.eta, prob.pi, prob.pow_nom, tau, prob.u_if,
+        prob.u_if_q, prob.ratio, u_pow_cap, capacity, price, lr, **kw)

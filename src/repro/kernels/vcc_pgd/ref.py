@@ -152,3 +152,46 @@ def pgd_epoch_ens_ref(delta, eta_e, pi, pow_nom_e, tau24, price, lo, ub,
                                    proj_iters)
 
     return jax.lax.fori_loop(0, iters, body, delta)
+
+
+# ------------------------------------------- joint spatio-temporal variant
+
+def joint_step_arrays(d, s, eta, pi, pow_nom, tau, u_if, u_if_q, ratio,
+                      u_pow_cap, capacity, price, lr_d, temp, lambda_e,
+                      drop_limit: float, proj_iters: int = 50):
+    """One fused JOINT spatio-temporal step in the kernel layout.
+
+    d/eta/pi/pow_nom/u_if/u_if_q/ratio: (n, H); s/tau/u_pow_cap/capacity/
+    price/lr_d: (n, 1); temp/lambda_e: scalars (possibly traced);
+    drop_limit: static float. Everything per-cluster is fused: the
+    temporal bounds lo/ub are RECOMPUTED from the shifted budget
+    tau + s (the same formulas as ``core.vcc.delta_bounds``, including
+    the feasibility mask that collapses hopeless clusters to {0}), the
+    linearized carbon + softmax-peak gradient is taken at the shifted
+    point — power = pow_nom + pi * (d * (tau+s) + s) / 24, which keeps
+    the baseline pi*s/24 term of moving the flat budget itself — and
+    delta is projected exactly onto its conservation slab.
+
+    Returns (d', g_s): the updated delta tile and the per-cluster shift
+    gradient (n, 1). The s update itself conserves over ALL clusters
+    (sum_c s = 0), so it cannot be tiled and happens outside
+    (``core.solver.joint_epochs``).
+    """
+    tau_s = tau + s
+    t24 = jnp.clip(tau_s / 24.0, 1e-9, None)
+    ub = jnp.minimum((u_pow_cap - u_if_q) / t24 - 1.0,
+                     (capacity / ratio - u_if) / t24 - 1.0)
+    ub = jnp.clip(ub, -drop_limit, 24.0)
+    feas = (jnp.sum(ub, axis=1, keepdims=True) >= 0.0) \
+        & (tau_s > 1e-6) \
+        & jnp.all(ub > -drop_limit + 1e-9, axis=1, keepdims=True)
+    lo = jnp.where(feas, jnp.full_like(ub, -drop_limit), 0.0)
+    ub = jnp.where(feas, ub, 0.0)
+
+    pow_h = pow_nom + pi * (d * tau_s + s) / 24.0
+    w = jax.nn.softmax(pow_h / temp, axis=1)
+    gcoef = (lambda_e * eta + price * w) * pi
+    g_d = gcoef * (tau_s / 24.0)
+    g_s = jnp.sum(gcoef * (1.0 + d), axis=1, keepdims=True) / 24.0
+    d2 = project_row(d - lr_d * g_d, lo, ub, proj_iters)
+    return d2, g_s

@@ -11,7 +11,6 @@ their JAX-level op_name metadata, to localize sharding/compute waste.
 
 import argparse
 import re
-from collections import defaultdict
 
 from repro.launch import hlo_analysis as H
 
@@ -84,11 +83,10 @@ def main():
                                          args.mesh == "multipod")
     text = compiled.as_text()
     dots, colls = top_ops(text, args.top)
-    total = sum(r[0] for r in dots)
-    print(f"== top dots (per-device flops x trips) ==")
+    print("== top dots (per-device flops x trips) ==")
     for fl, mult, t, label in dots:
         print(f"  {fl:12.3e}  x{int(mult):4d}  {t:48s}  {label[:110]}")
-    print(f"== top collectives (effective bytes) ==")
+    print("== top collectives (effective bytes) ==")
     for b, mult, kind, t, label in colls:
         print(f"  {b:12.3e}  x{int(mult):4d}  {kind:18s} {t:40s}  "
               f"{label[:100]}")

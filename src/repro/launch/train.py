@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import argparse
 import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +31,6 @@ from repro.launch.mesh import make_local_mesh
 from repro.models import build_model
 from repro.optim import AdamWConfig, init_opt_state
 from repro.optim.compression import init_error_feedback, roundtrip
-from repro.sharding import batch_pspecs, param_pspecs, shardings
 from repro.sharding.act import activation_sharding
 from repro.training import make_train_step
 
@@ -88,8 +86,6 @@ def main(argv=None):
 
     params = model.init(jax.random.PRNGKey(0))
     opt_state = init_opt_state(params, opt_cfg)
-    p_sh = shardings(param_pspecs(cfg, jax.eval_shape(lambda: params), mesh),
-                     mesh)
     ef = init_error_feedback(params) if args.compress else None
 
     base_step_fn = make_train_step(model, opt_cfg)

@@ -7,7 +7,6 @@ on the compressed latent cache.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -123,7 +122,6 @@ def _mla_kv_latent(p, cfg, x, positions):
 def apply_mla(p, cfg: ModelConfig, x, positions, *, return_kv: bool = False):
     """Full-sequence MLA (expanded path). x: (B, S, D)."""
     m, a = cfg.mla, cfg.attn
-    N = a.num_heads
     q_nope, q_rope = _mla_q(p, cfg, x, positions)
     ckv, k_rope = _mla_kv_latent(p, cfg, x, positions)
     k_nope = jnp.einsum("bsl,lnh->bsnh", ckv, p["wk_b"])

@@ -6,8 +6,6 @@ positions sinusoidal instead of Whisper's 448 learned ones — DESIGN.md §4).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -144,7 +142,6 @@ class EncDecLM:
                 "cross_k": kv(Le), "cross_v": kv(Le)}
 
     def prefill(self, p, batch, max_seq: int):
-        cfg = self.cfg
         enc_out = self.encode(p, batch["frames"])
         x, kvs = self.decode_full(p, batch["tokens"], enc_out,
                                   collect_kv=True)

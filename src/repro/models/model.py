@@ -9,7 +9,6 @@ device allocation (the dry-run pattern).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict
 
 import jax

@@ -9,7 +9,6 @@ Both reduce to the chunked gated-linear-attention primitive in
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

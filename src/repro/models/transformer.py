@@ -14,7 +14,6 @@ configurable remat policy. Every model exposes:
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -236,7 +235,6 @@ class DecoderLM:
     # ---------------- decode
     def init_cache(self, batch: int, max_seq: int):
         shapes = _attn_cache_shapes(self.cfg, batch, max_seq)
-        mk = lambda sh_dt: jnp.zeros(*sh_dt)
         cache = {"stack": {k: jnp.zeros((self.n_stack,) + sh, dt)
                            for k, (sh, dt) in shapes.items()}}
         for i in range(self.n_prefix):
@@ -523,7 +521,6 @@ class RWKVLM:
                 "shift_c": jnp.zeros((Lx, batch, 1, cfg.d_model), dt)}
 
     def prefill(self, p, batch, max_seq: int):
-        cfg = self.cfg
         x, (sh_t, wkv, sh_c) = self.forward(p, batch["tokens"], collect=True)
         cache = {"wkv": wkv, "shift_t": sh_t, "shift_c": sh_c}
         logits = jnp.einsum("bd,vd->bv", x[:, -1].astype(f32),

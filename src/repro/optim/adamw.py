@@ -8,9 +8,7 @@ can enable masters.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
-from typing import Optional, Tuple
 
 import jax
 from jax.sharding import PartitionSpec as P

@@ -12,7 +12,7 @@ Leading stacking axes (scan over layers / groups) are unsharded.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import numpy as np

@@ -12,10 +12,12 @@ from repro.sim.engine import (SimConfig, SimParams, SimState, make_init,
                               rollout_batch_sharded, rollout_sequential)
 from repro.sim.ledger import Ledger, init_ledger, ledger_update, summarize
 from repro.sim.scenarios import (Scenario, build_params, build_batch,
-                                 default_library, risk_sweep_library,
+                                 default_library, mobility_sweep_library,
+                                 risk_sweep_library, MOBILITY_SWEEP,
                                  RISK_BETAS, RISK_MEMBERS)
-from repro.sim.report import (scenario_rows, format_table, risk_sweep_rows,
-                              RISK_COLUMNS)
+from repro.sim.report import (scenario_rows, format_table,
+                              mobility_sweep_rows, risk_sweep_rows,
+                              MOBILITY_COLUMNS, RISK_COLUMNS)
 
 __all__ = [
     "SimConfig", "SimParams", "SimState", "make_init", "make_day_step",
@@ -23,6 +25,8 @@ __all__ = [
     "rollout_sequential",
     "Ledger", "init_ledger", "ledger_update", "summarize",
     "Scenario", "build_params", "build_batch", "default_library",
-    "risk_sweep_library", "RISK_BETAS", "RISK_MEMBERS",
-    "scenario_rows", "format_table", "risk_sweep_rows", "RISK_COLUMNS",
+    "mobility_sweep_library", "risk_sweep_library", "MOBILITY_SWEEP",
+    "RISK_BETAS", "RISK_MEMBERS",
+    "scenario_rows", "format_table", "mobility_sweep_rows",
+    "risk_sweep_rows", "MOBILITY_COLUMNS", "RISK_COLUMNS",
 ]

@@ -32,10 +32,8 @@ body compilation may differ in FMA choices).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import stages
 from repro.core.stages import (SimParams, SimState,    # noqa: F401
@@ -54,7 +52,9 @@ class SimConfig:
     hist_days: int = 35           # rolling-history window (weeks * 7)
     slo_margin: float = 1.0
     slo_pause_days: int = 7
-    spatial_iters: int = 100      # spatial pre-shift PGD iterations
+    joint_spatial: bool = False   # True = joint spatio-temporal optimize
+    #                               (static graph selection; each
+    #                               scenario's mobility stays a data leaf)
     n_members: int = 1            # forecast-ensemble size K (static shape;
     #                               K > 1 turns on the CVaR risk objective
     #                               at each scenario's risk_beta)
@@ -62,7 +62,7 @@ class SimConfig:
     def stage_config(self) -> stages.StageConfig:
         return stages.StageConfig(slo_margin=self.slo_margin,
                                   slo_pause_days=self.slo_pause_days,
-                                  spatial_iters=self.spatial_iters,
+                                  joint_spatial=self.joint_spatial,
                                   n_members=self.n_members)
 
 

@@ -37,6 +37,29 @@ RISK_COLUMNS = ("carbon_saved_pct", "flex_completion_pct",
                 "flex_within_24h_pct", "delayed_cpu_h_per_day")
 
 
+MOBILITY_COLUMNS = ("carbon_saved_pct", "carbon_vs_sequential_pct",
+                    "peak_reduction_pct", "flex_within_24h_pct")
+
+
+def mobility_sweep_rows(led_joint: Ledger, led_seq: Ledger,
+                        scenario_names: Sequence[str], n_seeds: int
+                        ) -> List[Dict[str, float]]:
+    """Rows for the mobility sweep: ledger summaries of the JOINT
+    (``SimConfig(joint_spatial=True)``) rollouts plus the carbon delta
+    against the sequential pre-shift rollouts of the SAME
+    (scenario x seed) batch. ``carbon_vs_sequential_pct > 0`` means the
+    joint optimizer emitted less than the decoupled greedy pre-shift +
+    temporal solve."""
+    rows = scenario_rows(led_joint, scenario_names, n_seeds)
+    seq = scenario_rows(led_seq, scenario_names, n_seeds)
+    for r, q in zip(rows, seq):
+        base = max(abs(q["carbon_kg"]), 1e-9)
+        r["carbon_vs_sequential_pct"] = \
+            100.0 * (q["carbon_kg"] - r["carbon_kg"]) / base
+        r["sequential_carbon_kg"] = q["carbon_kg"]
+    return rows
+
+
 def risk_sweep_rows(ledgers_by_k: Dict[int, "Ledger"],
                     scenario_names: Sequence[str], n_seeds: int
                     ) -> List[Dict[str, float]]:
@@ -60,6 +83,7 @@ def format_table(rows: List[Dict[str, float]],
     """Fixed-width ASCII table: one line per scenario."""
     name_w = max([len("scenario")] + [len(r["scenario"]) for r in rows]) + 2
     headers = {"carbon_saved_pct": "carbonSaved%",
+               "carbon_vs_sequential_pct": "vsSeq%",
                "peak_reduction_pct": "peakRed%",
                "flex_within_24h_pct": "flex<24h%",
                "flex_completion_pct": "flexDone%",

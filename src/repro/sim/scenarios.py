@@ -110,6 +110,17 @@ class DemandSurge(Perturbation):
         sched["arrival_scale"][w] *= self.scale
 
 
+@dataclass(frozen=True)
+class CapacitySqueeze(Perturbation):
+    """Fleetwide machine-capacity derate (tight-supply regime: temporal
+    shaping bounds bind, so spatially exporting work matters)."""
+    scale: float = 0.75
+
+    def apply(self, sched, rng, cfg):
+        w = self.window(sched["cap_scale"].shape[0])
+        sched["cap_scale"][w] *= self.scale
+
+
 # ----------------------------------------------------------------- scenario
 
 @dataclass(frozen=True)
@@ -220,6 +231,40 @@ def default_library(days: int = 14) -> List[Scenario]:
                   ClusterOutage(start=half, length=max(days // 4, 1),
                                 frac=0.2),
                   DemandSurge(start=half, scale=1.4))),
+    ]
+
+
+MOBILITY_SWEEP = (0.0, 0.1, 0.3, 0.6)
+
+
+def mobility_sweep_library(days: int = 14,
+                           mobilities: Sequence[float] = MOBILITY_SWEEP
+                           ) -> List[Scenario]:
+    """The spatial-mobility sweep family (joint spatio-temporal path).
+
+    Mobility is swept as a data leaf (one batched rollout) under a
+    geographically skewed, supply-tight grid: a deep renewable drought
+    pinned to zone 0 for the whole horizon, a fleetwide demand surge, and
+    a capacity squeeze — so the dirty zone's clusters saturate their
+    shaping bounds and EXPORTING work (not just delaying it) is what
+    saves carbon; this is the regime where the joint optimizer can beat
+    the greedy pre-shift. mobility=0 is the temporal-only control row
+    (the shift is pinned to zero; the joint path may still refine delta,
+    so its realized rollouts match the sequential path only to float
+    tolerance). Run with ``SimConfig(joint_spatial=True)`` and compare
+    against the same batch under ``joint_spatial=False`` for the
+    joint-vs-sequential carbon delta (``report.mobility_sweep_rows``,
+    ``benchmarks/sim_bench.py``).
+    """
+    return [
+        Scenario(f"mobility{int(round(100 * m)):03d}",
+                 f"{m:.0%} of flexible work location-flexible under a "
+                 "zone-0 drought + surge + capacity squeeze",
+                 (RenewableDrought(depth=0.8, zones=(0,)),
+                  DemandSurge(scale=1.3),
+                  CapacitySqueeze(scale=0.75)),
+                 lambda_e=1.0, lambda_p=0.02, mobility=m)
+        for m in mobilities
     ]
 
 

@@ -1,12 +1,10 @@
 """Step builders shared by the trainer, server and dry-run driver."""
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.optim import AdamWConfig, adamw_update, init_opt_state
+from repro.optim import AdamWConfig, adamw_update
 
 
 def make_train_step(model, opt_cfg: AdamWConfig):

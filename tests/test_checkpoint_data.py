@@ -1,7 +1,6 @@
 """Checkpointing (atomicity, kill/resume, elastic restore) + data pipeline
 determinism."""
 import os
-import shutil
 import subprocess
 import sys
 

@@ -5,11 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_arch, SHAPES
+from repro.configs import get_arch
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.models import build_model, param_specs
 from repro.optim import AdamWConfig, init_opt_state
-from repro.sharding import param_pspecs, shardings
+from repro.sharding import param_pspecs
 from repro.training import make_train_step
 
 
@@ -32,7 +32,6 @@ def test_param_pspecs_cover_all_archs():
 
 
 def test_smoke_train_lowering_and_analysis():
-    mesh = _mesh()
     cfg = get_arch("yi-6b").smoke
     model = build_model(cfg)
     opt_cfg = AdamWConfig()
@@ -57,7 +56,6 @@ def test_smoke_train_lowering_and_analysis():
 
 
 def test_analyzer_counts_collectives_in_loops():
-    import os
     txt = """
 HloModule test, is_scheduled=true
 
@@ -93,7 +91,6 @@ ENTRY %main (a: f32[8]) -> f32[8] {
 
 def test_full_config_param_count_sane():
     """Full-config parameter totals are within 20% of published sizes."""
-    import re
     expected = {"yi-6b": 6.1e9, "deepseek-67b": 67e9, "qwen3-0.6b": 0.6e9,
                 "gemma2-9b": 9.2e9, "deepseek-moe-16b": 16.4e9,
                 "deepseek-v2-236b": 236e9, "zamba2-7b": 7.2e9,

@@ -2,7 +2,6 @@
 sweep, interpret mode (deliverable c)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.kernels.flash_attention.kernel import flash_attention

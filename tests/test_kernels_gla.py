@@ -1,7 +1,6 @@
 """GLA (linear_scan) kernel + chunked ref vs sequential oracle."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.kernels.linear_scan.kernel import gla_pallas

@@ -9,7 +9,6 @@ counterfactual the engine advances in the same trace.
 """
 import jax
 import numpy as np
-import pytest
 
 from repro.sim import (SimConfig, build_batch, default_library, make_init,
                        risk_sweep_library, rollout_batch)

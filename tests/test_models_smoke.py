@@ -1,9 +1,7 @@
 """Per-arch smoke: reduced same-family config, one forward/train step on
 CPU, asserting output shapes + finite values (deliverable f)."""
-import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -27,7 +27,6 @@ def test_pd_fit_mape_under_5pct():
 
 
 def test_slope_is_derivative():
-    key = jax.random.PRNGKey(1)
     cpu = jnp.linspace(0.05, 0.95, 500)
     pw = 100 + 300 * cpu ** 1.2
     coef, breaks = power.fit_pd_model(cpu, pw)

@@ -18,7 +18,6 @@ point-forecast path), smaller beta is more risk-averse. Bitwise notes:
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import risk, vcc
 from repro.kernels.vcc_pgd import ref as kref

@@ -1,11 +1,9 @@
 """Spatial shifting invariants: conservation, mobility bounds, carbon
 monotonicity (flexible work moves toward cleaner clusters)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.spatial import spatial_shift, spatial_shift_batched
 from repro.core.vcc import VCCProblem

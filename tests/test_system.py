@@ -1,7 +1,6 @@
 """End-to-end behaviour of the paper's system: the CICS day cycle shifts
 flexible load toward green hours while preserving daily totals and honoring
 the SLO feedback loop (paper §IV)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

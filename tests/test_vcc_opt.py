@@ -3,10 +3,9 @@ and the Pallas kernel path."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core.vcc import (VCCProblem, delta_bounds, greedy_linear_reference,
-                            project_conservation, solve_vcc)
+from repro.core.vcc import (VCCProblem, delta_bounds,
+                            greedy_linear_reference, solve_vcc)
 from repro.kernels.vcc_pgd.kernel import pgd_epoch_pallas
 from repro.kernels.vcc_pgd.ref import pgd_epoch_ref
 
