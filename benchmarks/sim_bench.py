@@ -10,8 +10,11 @@ solve (the member axis is vmapped/kernel-reduced, so the target is << Kx),
 the risk-sweep (beta) trade-off rows, the joint spatio-temporal solve
 cost relative to the temporal-only solve plus its carbon edge over the
 sequential pre-shift (`joint_solve_cost_ratio` / `joint_carbon_delta_pct`),
-and the mobility-sweep rows (joint vs sequential rollouts of the same
-batch). Registered in run.py; also a CLI:
+the mobility-sweep rows (joint vs sequential rollouts of the same
+batch), the horizon-scaling rows (streaming vs rescan days/s at
+H in {56, 182, 364} with per-rollout state bytes), and the 14-day
+streaming-vs-rescan forecast-drift probe. Registered in run.py; also a
+CLI:
 
     PYTHONPATH=src python -m benchmarks.sim_bench [--quick] [--out PATH]
 
@@ -20,13 +23,17 @@ batched engine loses its throughput edge over the legacy loop, if the
 legacy and engine paths drift apart, if the K=8 ensemble solve costs
 >= 4x the K=1 solve, if the per-member ensemble throughput regresses
 >1.5x against the committed BENCH_sim.json baseline, if the joint
-spatio-temporal solve costs >= 3x the temporal-only solve, or if the
+spatio-temporal solve costs >= 3x the temporal-only solve, if the
 joint optimizer's carbon is worse than the sequential pre-shift
 (solver-level: exact gate, the best-of safeguard makes plan-level
 dominance structural; rollout-level: a generous tripwire per
 mobility-sweep row, since REALIZED carbon after sampled load can wiggle
-either way) — the regression tripwires the CI workflow runs on every
-push.
+either way), if the streaming day step is no longer O(1) in history
+length (days/s at H=364 must stay within 1.3x of H=56), if the
+streaming forecasts drift >= 0.35 from the rescan pipeline over a
+14-day dual run, or if PredictorState stops being strictly smaller than
+the seven replaced hist_* windows at H=364 — the regression tripwires
+the CI workflow runs on every push.
 """
 from __future__ import annotations
 
@@ -42,12 +49,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fleet as F
-from repro.core import risk, spatial, vcc
+from repro.core import risk, spatial, stats, vcc
+from repro.core.stages import hour_sum
 from repro.sim import (SimConfig, Scenario, build_batch, build_params,
                        default_library, make_day_step, make_init,
-                       mobility_sweep_library, mobility_sweep_rows,
-                       risk_sweep_library, risk_sweep_rows, rollout_batch,
-                       rollout_batch_sharded, scenario_rows)
+                       make_rollout, mobility_sweep_library,
+                       mobility_sweep_rows, risk_sweep_library,
+                       risk_sweep_rows, rollout_batch,
+                       rollout_batch_sharded, scenario_rows, state_nbytes)
 from repro.sim.engine import _day_xs
 
 BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_sim.json"
@@ -79,16 +88,96 @@ def _batched_days_per_sec(n_clusters=8, days=7, n_scen=4, n_seeds=2,
     batch = build_batch(cfg, scens, seeds, days)
     run = (rollout_batch_sharded if sharded else rollout_batch)(cfg, days)
     t0 = time.perf_counter()
-    _, led, _ = run(batch)
+    state, led, _ = run(batch)
     jax.block_until_ready(led)
     compile_wall = time.perf_counter() - t0
     t0 = time.perf_counter()
-    _, led, _ = run(batch)
+    state, led, _ = run(batch)
     jax.block_until_ready(led)
     wall = time.perf_counter() - t0
     fleet_days = n_scen * n_seeds * days
-    rows = scenario_rows(led, [s.name for s in scens], n_seeds)
+    rows = scenario_rows(led, [s.name for s in scens], n_seeds,
+                         horizon_days=days,
+                         state_bytes=state_nbytes(state,
+                                                  batch=n_scen * n_seeds))
     return fleet_days / wall, wall, compile_wall, fleet_days, rows
+
+
+def _horizon_scaling(n_clusters=4, days=6, reps=3, horizons=(56, 182, 364)):
+    """Steady-state DAY-STEP throughput vs history length, streaming vs
+    rescan, one rollout per config. Burn-in (init) runs once and is
+    excluded — it is one-time O(H) cost in both modes; what must not
+    scale with H is the carried day cycle. The rescan path's day-step
+    cost and state grow with H (seven (n, H, 24) windows rolled daily +
+    O(H) EWMA scans); the streaming path must be ~flat: days/s at H=364
+    within 1.3x of H=56 (CI gate), and its PredictorState strictly
+    smaller than the seven replaced hist_* windows at H=364 (CI gate)."""
+    rows = []
+    sc = Scenario("horizon_probe", "nominal fleet, horizon-scaling probe")
+    for streaming in (False, True):
+        for H in horizons:
+            cfg = SimConfig(n_clusters=n_clusters, n_campuses=2, n_zones=2,
+                            pds_per_cluster=2, hist_days=H,
+                            streaming=streaming)
+            batch = build_batch(cfg, [sc], [0], days)
+            init = jax.jit(jax.vmap(make_init(cfg)))
+            roll = jax.jit(jax.vmap(make_rollout(cfg, days)))
+            state0 = init(batch)
+            jax.block_until_ready(state0)
+            _, led, _ = roll(batch, state0)          # compile the scan
+            jax.block_until_ready(led)
+            best = float("inf")
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                _, led, _ = roll(batch, state0)
+                jax.block_until_ready(led)
+                best = min(best, time.perf_counter() - t0)
+            row = {
+                "mode": "streaming" if streaming else "rescan",
+                "horizon_days": H,
+                "days_per_sec": days / best,
+                "state_bytes": state_nbytes(state0, batch=1),
+            }
+            if streaming:
+                row["predictor_bytes"] = stats.predictor_nbytes(state0.pred)
+            else:
+                row["replaced_hist_bytes"] = \
+                    stats.replaced_hist_nbytes(state0)
+            rows.append(row)
+    return rows
+
+
+def _streaming_drift(n_clusters=4, hist_days=28, days=14, seed=0):
+    """Max per-day relative drift (max |stream - rescan| / mean |rescan|
+    over uif/tuf/tr) of the streaming forecasts against the rescan
+    pipeline over a dual run replaying the SAME realized telemetry.
+    Day 0 is exact (handoff-bitwise warm start); after that the two
+    paths are different-memory estimators of the same quantities, and
+    this gate pins their divergence (documented tolerance: < 0.35, see
+    tests/test_streaming.py)."""
+    cfg = SimConfig(n_clusters=n_clusters, n_campuses=2, n_zones=2,
+                    pds_per_cluster=2, hist_days=hist_days)
+    sc = Scenario("stream_drift_probe", lambda_e=0.5)
+    p = build_params(cfg, sc, seed=seed, days=days)
+    s = jax.jit(make_init(cfg))(p)
+    pred = stats.init_predictor(
+        s.hist_uif, s.hist_flex_daily, s.hist_res_daily, s.hist_usage,
+        s.hist_res, s.hist_tr_pred, s.hist_uif_pred, s.day, p.gamma)
+    step = jax.jit(make_day_step(cfg))
+    worst = 0.0
+    for d in range(days):
+        fc_s = stats.streaming_forecast(pred, s.day, p.gamma)
+        s2, out = step(p, s, _day_xs(p, d))
+        for k in ("uif", "tuf", "tr"):
+            a, b = np.asarray(out.fc[k]), np.asarray(fc_s[k])
+            worst = max(worst, float(np.max(np.abs(a - b))
+                                     / (np.mean(np.abs(a)) + 1e-9)))
+        pred = stats.predictor_update(
+            pred, fc_s, s.day, p.gamma, s2.hist_uif[:, -1], out.res.served,
+            hour_sum(out.res.reservations), out.res.usage_total,
+            out.res.reservations)
+        s = s2
+    return worst
 
 
 def _legacy_engine_drift(n_clusters=4, hist_days=14, seed=0):
@@ -268,9 +357,13 @@ def run(quick: bool = False, out_path: Path = None):
         risk_kw = dict(n_clusters=4, days=3, members=(8,), n_seeds=1)
         mob_kw = dict(n_clusters=4, days=3, n_seeds=1,
                       mobilities=(0.0, 0.3))
+        # horizon-scaling + drift probes run the SAME H set as the full
+        # run: the acceptance gates are defined at H in {56, 182, 364}
+        hor_kw = dict(days=4, reps=2)
+        stream_kw = dict()
     else:
         legacy_kw, batch_kw, ens_kw, risk_kw = {}, {}, {}, {}
-        joint_kw, mob_kw = {}, {}
+        joint_kw, mob_kw, hor_kw, stream_kw = {}, {}, {}, {}
     base_dps, base_wall = _legacy_days_per_sec(**legacy_kw)
     (bat_dps, bat_wall, compile_wall, fleet_days,
      rows) = _batched_days_per_sec(**batch_kw)
@@ -281,6 +374,13 @@ def run(quick: bool = False, out_path: Path = None):
     joint = _joint_solve_cost(**joint_kw)
     risk_rows = _risk_sweep_rows(**risk_kw)
     mob_rows = _mobility_sweep_rows(**mob_kw)
+    hor_rows = _horizon_scaling(**hor_kw)
+    stream_drift = _streaming_drift(**stream_kw)
+    by_mode_h = {(r["mode"], r["horizon_days"]): r for r in hor_rows}
+    h_lo, h_hi = min(r["horizon_days"] for r in hor_rows), \
+        max(r["horizon_days"] for r in hor_rows)
+    stream_slowdown = by_mode_h[("streaming", h_lo)]["days_per_sec"] \
+        / by_mode_h[("streaming", h_hi)]["days_per_sec"]
     speedup = bat_dps / base_dps
     rec = {
         "legacy_python_loop_days_per_sec": base_dps,
@@ -299,6 +399,13 @@ def run(quick: bool = False, out_path: Path = None):
         "scenarios": rows,
         "risk_sweep": risk_rows,
         "mobility_sweep": mob_rows,
+        "horizon_scaling": hor_rows,
+        "streaming_forecast_drift": stream_drift,
+        "stream_slowdown_h364_vs_h56": stream_slowdown,
+        "predictor_bytes_h364":
+            by_mode_h[("streaming", h_hi)]["predictor_bytes"],
+        "replaced_hist_bytes_h364":
+            by_mode_h[("rescan", h_hi)]["replaced_hist_bytes"],
         **ens,
         **joint,
     }
@@ -327,7 +434,22 @@ def run(quick: bool = False, out_path: Path = None):
         ("sim_joint_carbon_delta_pct", joint["joint_carbon_delta_pct"],
          "carbon saved by joint vs sequential pre-shift (solver-level; "
          ">= 0 structural via the best-of safeguard)"),
+        ("sim_stream_slowdown_h364_vs_h56", stream_slowdown,
+         "streaming days/s at H=56 over H=364; target <= 1.3 (O(1) "
+         "day-step cost in history length)"),
+        ("sim_streaming_forecast_drift", stream_drift,
+         "14-day dual-run streaming-vs-rescan forecast drift; "
+         "target < 0.35 (documented estimator-difference tolerance)"),
+        ("sim_predictor_vs_hist_bytes_h364",
+         rec["predictor_bytes_h364"] / rec["replaced_hist_bytes_h364"],
+         f"PredictorState {rec['predictor_bytes_h364']}B vs replaced "
+         f"hist_* {rec['replaced_hist_bytes_h364']}B at H=364; "
+         "target < 1 (strictly smaller)"),
     ]
+    for r in hor_rows:
+        out.append((f"sim_{r['mode']}_days_per_sec_h{r['horizon_days']}",
+                    r["days_per_sec"],
+                    f"state {r['state_bytes']}B per rollout"))
     for r in rows:
         out.append((f"sim_{r['scenario']}_carbon_saved_pct",
                     r["carbon_saved_pct"],
@@ -388,6 +510,23 @@ def main():
                 f"{-by_name['sim_joint_carbon_delta_pct']:.4f}% MORE carbon "
                 "than the sequential pre-shift (the best-of safeguard in "
                 "spatial.solve_joint is broken)")
+        if by_name["sim_stream_slowdown_h364_vs_h56"] > 1.3:
+            failures.append(
+                f"streaming day-step slows down "
+                f"{by_name['sim_stream_slowdown_h364_vs_h56']:.2f}x from "
+                "H=56 to H=364 (> 1.3x: the streaming path is no longer "
+                "O(1) in history length)")
+        if by_name["sim_streaming_forecast_drift"] >= 0.35:
+            failures.append(
+                f"streaming-vs-rescan forecast drift "
+                f"{by_name['sim_streaming_forecast_drift']:.3f} >= 0.35 "
+                "over the 14-day dual run (the streaming estimators "
+                "forked from the rescan pipeline)")
+        if by_name["sim_predictor_vs_hist_bytes_h364"] >= 1.0:
+            failures.append(
+                "PredictorState is not strictly smaller than the seven "
+                "replaced hist_* arrays at H=364 "
+                f"(ratio {by_name['sim_predictor_vs_hist_bytes_h364']:.3f})")
         for name, val, _ in rows:
             # Rollout-level tripwire, NOT a structural property: the
             # best-of safeguard guarantees plan-level dominance (gated

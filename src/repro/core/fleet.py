@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import carbon, power, slo, stages, vcc
+from repro.core import carbon, power, slo, stages, stats, vcc
 
 f32 = jnp.float32
 HIST_DAYS = 91            # 13 weeks of rolling history (default burn-in)
@@ -56,6 +56,10 @@ class FleetConfig:
     lambda_p: float = 0.05
     seed: int = 0
     hist_days: int = HIST_DAYS
+    streaming: bool = False       # True = O(1) streaming prediction layer
+    #                               (FleetState.pred carries the
+    #                               stats.PredictorState; the hist_*
+    #                               windows become zero-length stubs)
     slo: slo.SLOConfig = field(default_factory=slo.SLOConfig)
 
 
@@ -90,11 +94,13 @@ class FleetState:
     slo_state: Dict[str, jnp.ndarray]
     shaping_allowed: jnp.ndarray     # (n,) bool
     zones: Tuple[carbon.ZoneConfig, ...] = ()
+    pred: Optional[stats.PredictorState] = None   # streaming-mode carry
 
 
 def _stage_cfg(cfg: FleetConfig) -> stages.StageConfig:
     return stages.StageConfig(slo_margin=cfg.slo.margin,
-                              slo_pause_days=cfg.slo.pause_days)
+                              slo_pause_days=cfg.slo.pause_days,
+                              streaming=cfg.streaming)
 
 
 # --------------------------------------------- FleetState <-> stage pytrees
@@ -135,7 +141,8 @@ def sim_state(state: FleetState) -> stages.SimState:
         pause_left=state.slo_state["pause_left"],
         violation_days=state.slo_state["violation_days"],
         observed_days=state.slo_state["observed_days"],
-        shaping_allowed=state.shaping_allowed)
+        shaping_allowed=state.shaping_allowed,
+        pred=state.pred)
 
 
 def _writeback(state: FleetState, s: stages.SimState) -> FleetState:
@@ -156,6 +163,7 @@ def _writeback(state: FleetState, s: stages.SimState) -> FleetState:
                        "violation_days": s.violation_days,
                        "observed_days": s.observed_days}
     state.shaping_allowed = s.shaping_allowed
+    state.pred = s.pred
     return state
 
 
@@ -166,8 +174,10 @@ def _cluster_truth(key, cfg: FleetConfig):
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_init(n: int, m: int, z: int, hist_days: int):
-    return jax.jit(stages.make_init(n, m, z, hist_days))
+def _jitted_init(n: int, m: int, z: int, hist_days: int,
+                 streaming: bool = False):
+    return jax.jit(stages.make_init(n, m, z, hist_days,
+                                    streaming=streaming))
 
 
 def init_fleet(cfg: FleetConfig) -> FleetState:
@@ -205,7 +215,7 @@ def init_fleet(cfg: FleetConfig) -> FleetState:
         zones=carbon.default_zones(cfg.n_zones),
     )
     init = _jitted_init(cfg.n_clusters, cfg.n_campuses, cfg.n_zones,
-                        cfg.hist_days)
+                        cfg.hist_days, cfg.streaming)
     return _writeback(state, init(sim_params(state)))
 
 
@@ -230,9 +240,11 @@ def power_model_from_history(hist_usage, lam, capacity, pd_truth, key):
 
 
 def make_power_fn(state: FleetState):
-    """Cluster power from PD piecewise models fit on recent history."""
+    """Cluster power from PD piecewise models fit on recent history (the
+    streaming usage ring holds the same 28-day window — identical fit)."""
+    hist = state.pred.usage_ring if state.cfg.streaming else state.hist_usage
     return power_model_from_history(
-        state.hist_usage, state.lam, state.truth["capacity"],
+        hist, state.lam, state.truth["capacity"],
         state.pd_truth, jax.random.fold_in(_day_key(state, state.day), 1))
 
 
@@ -246,7 +258,11 @@ def day_forecasts_arrays(hist_uif, hist_flex_daily, hist_res_daily,
 
 
 def day_forecasts(state: FleetState):
-    """Run the forecasting pipeline for the next day (vmapped)."""
+    """Run the forecasting pipeline for the next day (vmapped; the O(1)
+    streaming pipeline when the fleet is configured for it)."""
+    if state.cfg.streaming:
+        return stages.forecast_stage_streaming(state.pred, state.day,
+                                               state.cfg.gamma)
     return stages.forecast_stage(
         state.hist_uif, state.hist_flex_daily, state.hist_res_daily,
         state.hist_usage, state.hist_res, state.hist_tr_pred,
@@ -278,8 +294,15 @@ def _observe_day(state: FleetState, day, shaped: bool,
 
     Adapter over ``stages.observe_stage`` for custom drivers (Fig. 12's
     randomized treatment); ``day_cycle`` runs the full staged step instead.
+    Rescan fleets only: the custom drivers roll the ``hist_*`` windows
+    this adapter maintains, which a streaming fleet no longer carries.
     """
     cfg = state.cfg
+    if cfg.streaming:
+        raise NotImplementedError(
+            "_observe_day drives the rescan history windows; run custom "
+            "drivers on a FleetConfig(streaming=False) fleet (day_cycle "
+            "itself supports streaming)")
     n = cfg.n_clusters
     day_key = _day_key(state, day)
     power_fn, _, _ = power_model_from_history(

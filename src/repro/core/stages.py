@@ -40,7 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (admission, carbon, forecast, power, risk, slo,
-                        spatial, vcc)
+                        spatial, stats, vcc)
 
 f32 = jnp.float32
 
@@ -49,26 +49,9 @@ f32 = jnp.float32
 hour_sum = admission.hour_sum
 
 
-def _register_barrier_batching():
-    """jax<=0.4 ships no vmap rule for optimization_barrier (newer jax
-    does). The rule is the identity on batch dims: barrier each operand,
-    keep its batch axis."""
-    try:
-        from jax._src.interpreters import batching
-        from jax._src.lax import lax as _lax
-        prim = _lax.optimization_barrier_p
-    except (ImportError, AttributeError):    # pragma: no cover
-        return
-    if prim in batching.primitive_batchers:
-        return
-
-    def rule(args, dims):
-        return prim.bind(*args), dims
-
-    batching.primitive_batchers[prim] = rule
-
-
-_register_barrier_batching()
+# jax<=0.4 vmap-rule shim for optimization_barrier — registered by the
+# lowest barrier-emitting module (forecast.ewma_update pins its products)
+forecast.register_barrier_batching()
 
 
 # ------------------------------------------------------------- fleet synth
@@ -174,7 +157,15 @@ class SimParams(NamedTuple):
 
 
 class SimState(NamedTuple):
-    """Array-only day-cycle state (the scan carry)."""
+    """Array-only day-cycle state (the scan carry).
+
+    Rescan mode carries the seven rolling ``hist_*`` windows (oldest
+    first) and ``pred=None``; streaming mode
+    (``StageConfig.streaming=True``) carries the O(1)
+    ``stats.PredictorState`` in ``pred``, the ``hist_*`` leaves become
+    zero-length stubs (shape (n, 0[, 24]) — dropped from memory, never
+    read), and ``carbon_hist`` is truncated to the trailing 7 days the
+    carbon forecaster actually consumes."""
     day: jnp.ndarray                  # () int32
     campus: jnp.ndarray               # (n,) int32
     zmap: jnp.ndarray                 # (n,) int32 zone of cluster
@@ -195,6 +186,7 @@ class SimState(NamedTuple):
     violation_days: jnp.ndarray       # (n,) int32
     observed_days: jnp.ndarray        # (n,) int32
     shaping_allowed: jnp.ndarray      # (n,) bool
+    pred: Optional[stats.PredictorState] = None   # streaming carry
 
 
 class StepOut(NamedTuple):
@@ -227,6 +219,11 @@ class StageConfig:
     #                               point-forecast path, graph unchanged;
     #                               K > 1 = CVaR over sampled realizations
     #                               at SimParams.risk_beta — core.risk)
+    streaming: bool = False       # True = O(1) streaming prediction layer
+    #                               (stats.PredictorState carry instead of
+    #                               the (n, H, 24) hist_* rescans); False
+    #                               keeps the legacy rescan graph
+    #                               byte-identical (golden trace)
     use_pallas: Optional[bool] = None   # VCC PGD kernel dispatch (None=auto)
     interpret: bool = False             # Pallas interpreter (CPU tests)
 
@@ -342,6 +339,14 @@ def forecast_stage(hist_uif, hist_flex_daily, hist_res_daily, hist_usage,
           "ratio_a": ra, "ratio_b": rb, "theta": theta, "alpha": alpha,
           "uif_q": uif_q}
     return jax.lax.optimization_barrier(fc)
+
+
+def forecast_stage_streaming(pred: stats.PredictorState, day, gamma):
+    """O(1) streaming counterpart of ``forecast_stage``: the same
+    barrier-pinned forecast dict from the ``stats.PredictorState`` carry
+    instead of rescanning the (n, H, 24) history windows."""
+    return jax.lax.optimization_barrier(
+        stats.streaming_forecast(pred, day, gamma))
 
 
 def build_problem_arrays(fc, eta_fc, power_fn, slope_fn, queue, u_pow_cap,
@@ -471,20 +476,36 @@ def make_day_step(cfg: StageConfig):
     operation, which is what the legacy fleet path uses)."""
     slo_cfg = slo.SLOConfig(margin=cfg.slo_margin,
                             pause_days=cfg.slo_pause_days)
+    if cfg.streaming and cfg.n_members > 1:
+        raise ValueError(
+            "StageConfig.streaming=True does not support forecast "
+            "ensembles (n_members > 1): risk.day_ensembles bootstraps "
+            "whole days of the hist_uif_pred/hist_uif error history, "
+            "which the streaming state no longer carries")
 
     def step(params: SimParams, state: SimState, xs: Dict[str, jnp.ndarray]
              ) -> Tuple[SimState, StepOut]:
         day_key = jax.random.fold_in(params.key, state.day)
         cap_day = jax.lax.optimization_barrier(
             params.truth["capacity"] * xs["cap_scale"])
-        # 1-2. power pipeline + load forecasting on rolling history
-        model = power_stage(state.hist_usage, params.lam,
-                            params.truth["capacity"], pd_truth(params),
-                            jax.random.fold_in(day_key, 1))
-        fc = forecast_stage(
-            state.hist_uif, state.hist_flex_daily, state.hist_res_daily,
-            state.hist_usage, state.hist_res, state.hist_tr_pred,
-            state.hist_uif_pred, state.day, params.gamma)
+        # 1-2. power pipeline + load forecasting. Streaming: O(1) updates
+        # over the PredictorState carry (the usage ring IS the 28-day
+        # window the rescan power fit slices, so the fit is bitwise the
+        # same); rescan: the legacy O(H) history-window graph.
+        if cfg.streaming:
+            model = power_stage(state.pred.usage_ring, params.lam,
+                                params.truth["capacity"], pd_truth(params),
+                                jax.random.fold_in(day_key, 1))
+            fc = forecast_stage_streaming(state.pred, state.day,
+                                          params.gamma)
+        else:
+            model = power_stage(state.hist_usage, params.lam,
+                                params.truth["capacity"], pd_truth(params),
+                                jax.random.fold_in(day_key, 1))
+            fc = forecast_stage(
+                state.hist_uif, state.hist_flex_daily, state.hist_res_daily,
+                state.hist_usage, state.hist_res, state.hist_tr_pred,
+                state.hist_uif_pred, state.day, params.gamma)
         # 3. carbon pipeline: scenario-perturbed grid, day-ahead forecast
         act_z, fc_z = carbon_stage(params.zone, state.carbon_hist,
                                    jax.random.fold_in(day_key, 4),
@@ -509,9 +530,6 @@ def make_day_step(cfg: StageConfig):
         gate = state.shaping_allowed & sol.shaped
         vcc_curve = jnp.where(gate[:, None], sol.vcc, cap_day[:, None] * 10.0)
         vcc_curve = jax.lax.optimization_barrier(vcc_curve)
-        # record predictions for trailing-error quantiles
-        hist_tr_pred = roll(state.hist_tr_pred, fc["tr"])
-        hist_uif_pred = roll(state.hist_uif_pred, fc["uif"])
         # 6. real time: admission on ACTUAL load (+ counterfactual)
         res, cf, u_if, _ = observe_stage(
             params.truth, state.day, day_key, vcc_curve, cap_day,
@@ -525,16 +543,29 @@ def make_day_step(cfg: StageConfig):
         new_slo, allowed = slo_stage(slo_state, slo_cfg,
                                      hour_sum(res.reservations),
                                      hour_sum(vcc_curve), res.unmet)
+        if cfg.streaming:
+            # O(1) telemetry: absorb the day into the streaming carry
+            # (prediction errors pair same-day with the fc issued above —
+            # exactly what the hist_*_pred rolls recorded for later)
+            telemetry = dict(
+                pred=stats.predictor_update(
+                    state.pred, fc, state.day, params.gamma, u_if,
+                    res.served, hour_sum(res.reservations),
+                    res.usage_total, res.reservations))
+        else:
+            # roll the rescan history windows (predictions included, for
+            # the trailing-error quantiles)
+            telemetry = dict(
+                hist_uif=roll(state.hist_uif, u_if),
+                hist_flex_daily=roll(state.hist_flex_daily, res.served),
+                hist_res_daily=roll(state.hist_res_daily,
+                                    hour_sum(res.reservations)),
+                hist_usage=roll(state.hist_usage, res.usage_total),
+                hist_res=roll(state.hist_res, res.reservations),
+                hist_tr_pred=roll(state.hist_tr_pred, fc["tr"]),
+                hist_uif_pred=roll(state.hist_uif_pred, fc["uif"]))
         new_state = state._replace(
             day=state.day + 1,
-            hist_uif=roll(state.hist_uif, u_if),
-            hist_flex_daily=roll(state.hist_flex_daily, res.served),
-            hist_res_daily=roll(state.hist_res_daily,
-                                hour_sum(res.reservations)),
-            hist_usage=roll(state.hist_usage, res.usage_total),
-            hist_res=roll(state.hist_res, res.reservations),
-            hist_tr_pred=hist_tr_pred,
-            hist_uif_pred=hist_uif_pred,
             carbon_hist=roll(state.carbon_hist, act_z),
             queue=res.queue_end,
             cf_queue=cf.queue_end,
@@ -543,6 +574,7 @@ def make_day_step(cfg: StageConfig):
             violation_days=new_slo["violation_days"],
             observed_days=new_slo["observed_days"],
             shaping_allowed=allowed,
+            **telemetry,
         )
         return new_state, StepOut(res=res, cf=cf, sol=sol,
                                   vcc_curve=vcc_curve, fc=fc, prob=prob,
@@ -603,10 +635,18 @@ def burnin_step(params: SimParams, state: SimState) -> SimState:
 
 
 def make_init(n_clusters: int, n_campuses: int, n_zones: int,
-              hist_days: int):
+              hist_days: int, streaming: bool = False):
     """init(params) -> burned-in SimState. jit- and vmap-compatible: the
-    hist_days burn-in runs under lax.scan (one dispatch, not hundreds)."""
+    hist_days burn-in runs under lax.scan (one dispatch, not hundreds).
+
+    With ``streaming=True`` the burn-in still fills the full history
+    window (it is one-time cost), then every streaming estimator is
+    warm-started from it (``stats.init_predictor`` — handoff-bitwise on
+    the EWMA components) and the seven ``hist_*`` windows are dropped to
+    zero-length stubs: the carried state becomes O(1) in hist_days."""
     n, m, z, H = n_clusters, n_campuses, n_zones, hist_days
+    if streaming and H < 7:
+        raise ValueError(f"streaming init needs hist_days >= 7, got {H}")
     campus_np = [i % m for i in range(n)]
     zmap_np = [(c % z) for c in campus_np]
 
@@ -653,6 +693,26 @@ def make_init(n_clusters: int, n_campuses: int, n_zones: int,
         limit = jax.ops.segment_sum(peak, state.campus,
                                     num_segments=m) * 0.97
         state = state._replace(campus_limit=limit.astype(f32))
+        if streaming:
+            pred = stats.init_predictor(
+                state.hist_uif, state.hist_flex_daily,
+                state.hist_res_daily, state.hist_usage, state.hist_res,
+                state.hist_tr_pred, state.hist_uif_pred, state.day,
+                params.gamma)
+            state = state._replace(
+                pred=pred,
+                # carbon_stage's day-ahead forecast reads only the
+                # trailing 7 days (carbon.forecast_day_ahead), so the
+                # streaming carry keeps exactly that window — bitwise
+                # the same forecasts, O(1) state in hist_days
+                carbon_hist=state.carbon_hist[:, -stats.WEEK:],
+                hist_uif=jnp.zeros((n, 0, 24), f32),
+                hist_flex_daily=jnp.zeros((n, 0), f32),
+                hist_res_daily=jnp.zeros((n, 0), f32),
+                hist_usage=jnp.zeros((n, 0, 24), f32),
+                hist_res=jnp.zeros((n, 0, 24), f32),
+                hist_tr_pred=jnp.zeros((n, 0), f32),
+                hist_uif_pred=jnp.zeros((n, 0, 24), f32))
         # materialize: burned-in state must not fuse into rollout consumers
         # (jit(init + rollout) would otherwise drift vs separate calls)
         return jax.lax.optimization_barrier(state)

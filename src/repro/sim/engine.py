@@ -58,12 +58,19 @@ class SimConfig:
     n_members: int = 1            # forecast-ensemble size K (static shape;
     #                               K > 1 turns on the CVaR risk objective
     #                               at each scenario's risk_beta)
+    streaming: bool = False       # True = O(1) streaming prediction layer
+    #                               (stats.PredictorState carry; state and
+    #                               day-step cost independent of
+    #                               hist_days — year-scale rollouts);
+    #                               False = the legacy rescan graph
+    #                               (golden-trace pinned)
 
     def stage_config(self) -> stages.StageConfig:
         return stages.StageConfig(slo_margin=self.slo_margin,
                                   slo_pause_days=self.slo_pause_days,
                                   joint_spatial=self.joint_spatial,
-                                  n_members=self.n_members)
+                                  n_members=self.n_members,
+                                  streaming=self.streaming)
 
 
 def _metrics(res, cf) -> DayMetrics:
@@ -85,7 +92,7 @@ def make_day_step(cfg: SimConfig):
 def make_init(cfg: SimConfig):
     """init(params) -> burned-in SimState. jit- and vmap-compatible."""
     return stages.make_init(cfg.n_clusters, cfg.n_campuses, cfg.n_zones,
-                            cfg.hist_days)
+                            cfg.hist_days, streaming=cfg.streaming)
 
 
 def _day_xs(params: SimParams, d=None):

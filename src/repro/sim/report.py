@@ -6,25 +6,44 @@ Input: a batched Ledger whose leading axis is scenario-major x seed-minor
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import numpy as np
 
+from repro.core import stats
 from repro.sim.ledger import Ledger, summarize
 
 COLUMNS = ("carbon_saved_pct", "peak_reduction_pct", "flex_within_24h_pct",
            "kwh_saved_pct", "delayed_cpu_h_per_day")
 
 
+def state_nbytes(state, batch: int = 1) -> int:
+    """Per-rollout bytes of a carried state pytree (SimState — streaming
+    or rescan). ``batch``: leading (scenario x seed) extent to divide
+    out when the state came from a batched rollout."""
+    return stats.pytree_nbytes(state) // max(batch, 1)
+
+
 def scenario_rows(ledgers: Ledger, scenario_names: Sequence[str],
-                  n_seeds: int) -> List[Dict[str, float]]:
-    """Per-scenario mean +/- std (over seeds) of the ledger summaries."""
+                  n_seeds: int, horizon_days: Optional[int] = None,
+                  state_bytes: Optional[int] = None
+                  ) -> List[Dict[str, float]]:
+    """Per-scenario mean +/- std (over seeds) of the ledger summaries.
+
+    ``horizon_days`` (rollout length) and ``state_bytes`` (per-rollout
+    carried state size, see ``state_nbytes``) tag every row when given,
+    so sweeps record the memory footprint alongside throughput — the
+    axis the streaming prediction layer moves."""
     summaries = jax.vmap(summarize)(ledgers)        # dict of (B,)
     rows = []
     for i, name in enumerate(scenario_names):
         sl = slice(i * n_seeds, (i + 1) * n_seeds)
         row: Dict[str, float] = {"scenario": name, "n_seeds": n_seeds}
+        if horizon_days is not None:
+            row["horizon_days"] = int(horizon_days)
+        if state_bytes is not None:
+            row["state_bytes"] = int(state_bytes)
         for k, v in summaries.items():
             vals = np.asarray(v[sl], dtype=np.float64)
             row[k] = float(vals.mean())

@@ -94,6 +94,45 @@ def test_alpha_solves_eq3():
         np.testing.assert_allclose(float(lhs), float(theta), rtol=1e-4)
 
 
+def test_deviation_corrector_unbiased_on_periodic_series():
+    """Regression for the deviation-corrector bug: the coef used to be
+    fit against a CONSTANT weekly level, so a purely periodic series
+    (zero true deviations) leaked its day-of-week pattern into the
+    'deviations' and produced a spurious correction. Fit against the
+    dow-factored weekly predictions, an exactly periodic history must
+    forecast (close to) exactly."""
+    pattern = np.asarray([1.2, 1.1, 1.0, 0.9, 0.8, 1.05, 0.95])
+    days = 35
+    daily = jnp.asarray(10.0 * pattern[np.arange(days) % 7], jnp.float32)
+    hours = 1.0 + 0.3 * np.sin(np.arange(24) / 24.0 * 2 * np.pi)
+    hourly = jnp.asarray(
+        10.0 * pattern[np.arange(days) % 7][:, None] * hours[None],
+        jnp.float32)
+    for dow_next in range(7):
+        hist = daily[:days - 7 + dow_next]
+        truth = float(daily[days - 7 + dow_next])
+        pred = float(forecast.forecast_daily_total(
+            hist, jnp.asarray(hist.shape[0] % 7)))
+        assert abs(pred - truth) / truth < 1e-3, (dow_next, pred, truth)
+        hist_h = hourly[:days - 7 + dow_next]
+        pred_h = forecast.forecast_inflexible(
+            hist_h, jnp.asarray(hist_h.shape[0] % 7))
+        ape = np.abs(np.asarray(pred_h)
+                     - np.asarray(hourly[days - 7 + dow_next])) \
+            / np.asarray(hourly[days - 7 + dow_next])
+        assert ape.max() < 1e-3, (dow_next, ape.max())
+
+
+def test_calibrate_half_lives_vectorized_matches_loop():
+    """The single vmapped+jitted grid evaluation must select the same
+    half-lives as the legacy per-combo Python loop (fixed seed)."""
+    hist = _history(days=42, seed=3)
+    grid = (0.25, 1.0, 4.0)
+    got = forecast.calibrate_half_lives(hist, grid=grid)
+    want = forecast.calibrate_half_lives_loop(hist, grid=grid)
+    assert got == want, (got, want)
+
+
 def test_theta_is_97th_quantile_requirement():
     preds = jnp.full((90,), 100.0)
     actuals = jnp.asarray(100.0 + np.random.RandomState(0).randn(90) * 5)
