@@ -31,9 +31,15 @@ mobility-sweep row, since REALIZED carbon after sampled load can wiggle
 either way), if the streaming day step is no longer O(1) in history
 length (days/s at H=364 must stay within 1.3x of H=56), if the
 streaming forecasts drift >= 0.35 from the rescan pipeline over a
-14-day dual run, or if PredictorState stops being strictly smaller than
-the seven replaced hist_* windows at H=364 — the regression tripwires
-the CI workflow runs on every push.
+14-day dual run, if PredictorState stops being strictly smaller than
+the seven replaced hist_* windows at H=364, if the telemetry-off day
+step stops compiling to the byte-identical legacy HLO (the collapse
+contract), or if the telemetry-on rollout costs >= 15% over the
+telemetry-off rollout — the regression tripwires the CI workflow runs
+on every push. Every failed gate prints the measured value against the
+gate threshold. Quick mode also exports the telemetry JSONL trace
+(TELEMETRY_trace.jsonl next to the --out json) and per-stage cost rows
+(``stage_costs`` in the json) — the CI artifacts.
 """
 from __future__ import annotations
 
@@ -49,14 +55,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fleet as F
-from repro.core import risk, spatial, stats, vcc
+from repro.core import risk, solver, spatial, stats, vcc
+from repro.core import stages as stages_mod
 from repro.core.stages import hour_sum
 from repro.sim import (SimConfig, Scenario, build_batch, build_params,
                        default_library, make_day_step, make_init,
                        make_rollout, mobility_sweep_library,
                        mobility_sweep_rows, risk_sweep_library,
                        risk_sweep_rows, rollout_batch,
-                       rollout_batch_sharded, scenario_rows, state_nbytes)
+                       rollout_batch_sharded, scenario_rows, state_nbytes,
+                       telemetry_records, write_jsonl)
+from repro.sim import telemetry as telemetry_mod
 from repro.sim.engine import _day_xs
 
 BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_sim.json"
@@ -341,6 +350,82 @@ def _risk_sweep_rows(n_clusters=6, days=4, members=(1, 8), n_seeds=2,
     return risk_sweep_rows(ledgers_by_k, [s.name for s in scens], n_seeds)
 
 
+def _legacy_dual_ascent(inner, dual_update, x0, mu0, outer_iters):
+    """Verbatim pre-telemetry ``solver.dual_ascent`` (the two-value scan).
+    The collapse probe traces the day step against THIS to certify that
+    ``telemetry=False`` still compiles to the byte-identical legacy HLO."""
+    def outer(carry, _):
+        x, mu = carry
+        x = inner(x, mu)
+        mu = dual_update(x, mu)
+        return (x, mu), None
+
+    (x, mu), _ = jax.lax.scan(outer, (x0, mu0), None, length=outer_iters)
+    return x, mu
+
+
+def _telemetry_probe(n_clusters=6, days=4, n_scen=2, n_seeds=2,
+                     hist_days=14, reps=3):
+    """Telemetry collapse + overhead + stage-cost attribution probe.
+
+    Times the SAME (scenario x seed) batch rollout with telemetry off and
+    on (steady state, best-of-``reps``) -> ``telemetry_overhead_pct``
+    (CI gate: < 15%); byte-compares the telemetry-off day-step HLO
+    against the graph traced with the pre-telemetry dual-ascent scan ->
+    ``telemetry_hlo_identical`` (CI gate: must hold); profiles per-stage
+    compiled cost (``sim.telemetry.profile_stages``) -> ``stage_costs``
+    rows; and returns the exported JSONL trace records."""
+    base = dict(n_clusters=n_clusters, n_campuses=2, n_zones=2,
+                pds_per_cluster=2, hist_days=hist_days)
+    cfg_off = SimConfig(**base)
+    cfg_on = SimConfig(**base, telemetry=True)
+    scens = default_library(days)[:n_scen]
+    seeds = list(range(n_seeds))
+    batch = build_batch(cfg_off, scens, seeds, days)
+
+    def timed(cfg):
+        run_fn = rollout_batch(cfg, days)
+        out = run_fn(batch)
+        jax.block_until_ready(out)               # compile + warm
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = run_fn(batch)
+            jax.block_until_ready(out)
+            best = min(best, time.perf_counter() - t0)
+        return best, out
+
+    t_off, _ = timed(cfg_off)
+    t_on, (_, _, traj) = timed(cfg_on)
+
+    # collapse contract: telemetry-off day step == pre-telemetry graph
+    p1 = build_params(cfg_off, scens[0], 0, days)
+    s1 = jax.jit(make_init(cfg_off))(p1)
+    xs = _day_xs(p1, 0)
+    scfg = cfg_off.stage_config()
+    hlo_off = stages_mod.jitted_day_step(scfg).lower(p1, s1, xs).as_text()
+    orig = solver.dual_ascent
+    solver.dual_ascent = _legacy_dual_ascent
+    stages_mod.jitted_day_step.cache_clear()
+    try:
+        hlo_legacy = stages_mod.jitted_day_step(scfg).lower(
+            p1, s1, xs).as_text()
+    finally:
+        solver.dual_ascent = orig
+        stages_mod.jitted_day_step.cache_clear()
+
+    stage_costs = telemetry_mod.profile_stages(scfg, p1, s1, reps=reps)
+    records = telemetry_records(traj["telemetry"],
+                                [s.name for s in scens], n_seeds)
+    return {
+        "telemetry_rollout_off_s": t_off,
+        "telemetry_rollout_on_s": t_on,
+        "telemetry_overhead_pct": 100.0 * (t_on / t_off - 1.0),
+        "telemetry_hlo_identical": bool(hlo_off == hlo_legacy),
+        "stage_costs": stage_costs,
+    }, records
+
+
 def run(quick: bool = False, out_path: Path = None):
     # quick mode must never clobber the committed full-run baseline it is
     # gated against; default its output to a sibling file
@@ -361,9 +446,10 @@ def run(quick: bool = False, out_path: Path = None):
         # run: the acceptance gates are defined at H in {56, 182, 364}
         hor_kw = dict(days=4, reps=2)
         stream_kw = dict()
+        tel_kw = dict(n_clusters=4, days=3, reps=2)
     else:
         legacy_kw, batch_kw, ens_kw, risk_kw = {}, {}, {}, {}
-        joint_kw, mob_kw, hor_kw, stream_kw = {}, {}, {}, {}
+        joint_kw, mob_kw, hor_kw, stream_kw, tel_kw = {}, {}, {}, {}, {}
     base_dps, base_wall = _legacy_days_per_sec(**legacy_kw)
     (bat_dps, bat_wall, compile_wall, fleet_days,
      rows) = _batched_days_per_sec(**batch_kw)
@@ -376,6 +462,7 @@ def run(quick: bool = False, out_path: Path = None):
     mob_rows = _mobility_sweep_rows(**mob_kw)
     hor_rows = _horizon_scaling(**hor_kw)
     stream_drift = _streaming_drift(**stream_kw)
+    tel, trace_records = _telemetry_probe(**tel_kw)
     by_mode_h = {(r["mode"], r["horizon_days"]): r for r in hor_rows}
     h_lo, h_hi = min(r["horizon_days"] for r in hor_rows), \
         max(r["horizon_days"] for r in hor_rows)
@@ -408,8 +495,12 @@ def run(quick: bool = False, out_path: Path = None):
             by_mode_h[("rescan", h_hi)]["replaced_hist_bytes"],
         **ens,
         **joint,
+        **tel,
     }
-    (out_path or BENCH_PATH).write_text(json.dumps(rec, indent=1))
+    dest = out_path or BENCH_PATH
+    dest.write_text(json.dumps(rec, indent=1))
+    # the structured trace the CI workflow uploads as an artifact
+    write_jsonl(dest.with_name("TELEMETRY_trace.jsonl"), trace_records)
     out = [
         ("sim_legacy_days_per_sec", base_dps,
          "Python day loop over the jitted staged step"),
@@ -445,7 +536,18 @@ def run(quick: bool = False, out_path: Path = None):
          f"PredictorState {rec['predictor_bytes_h364']}B vs replaced "
          f"hist_* {rec['replaced_hist_bytes_h364']}B at H=364; "
          "target < 1 (strictly smaller)"),
+        ("sim_telemetry_overhead_pct", tel["telemetry_overhead_pct"],
+         f"telemetry-on rollout vs off ({tel['telemetry_rollout_on_s']:.3f}s"
+         f" vs {tel['telemetry_rollout_off_s']:.3f}s); target < 15%"),
+        ("sim_telemetry_hlo_identical",
+         1.0 if tel["telemetry_hlo_identical"] else 0.0,
+         "telemetry-off day-step HLO vs the pre-telemetry graph; "
+         "1.0 = byte-identical (collapse contract)"),
     ]
+    for r in tel["stage_costs"]:
+        out.append((f"sim_stagecost_{r['stage']}_ms", r["wall_ms"],
+                    f"{r['pct']:.1f}% of summed stage wall time "
+                    f"(dot {r['dot_flops'] / 1e9:.3f} GFLOP)"))
     for r in hor_rows:
         out.append((f"sim_{r['mode']}_days_per_sec_h{r['horizon_days']}",
                     r["days_per_sec"],
@@ -471,6 +573,18 @@ def run(quick: bool = False, out_path: Path = None):
     return out
 
 
+def _gate(failures, measured, op, threshold, desc):
+    """CI gate: PASS iff ``measured <op> threshold``. A failure message
+    always prints the measured value against the gate threshold (the
+    actionable context), then the consequence ``desc``."""
+    ok = {"<": measured < threshold, "<=": measured <= threshold,
+          ">": measured > threshold, ">=": measured >= threshold}[op]
+    if not ok:
+        failures.append(
+            f"measured {measured:.4g} violates gate '{op} {threshold:g}': "
+            f"{desc}")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
@@ -486,47 +600,37 @@ def main():
         print(f"{name},{float(val):.4f},{derived}")
     if args.quick:
         failures = []
-        if by_name["sim_batched_speedup"] < 1.5:
-            failures.append(
-                f"batched engine speedup {by_name['sim_batched_speedup']:.2f}x"
-                " < 1.5x over the legacy loop")
-        if by_name["sim_legacy_engine_drift"] > 1e-5:
-            failures.append(
-                f"legacy/engine drift {by_name['sim_legacy_engine_drift']:.2e}"
-                " > 1e-5: the two day-cycle paths forked")
-        if by_name["sim_ensemble_solve_cost_ratio"] >= 4.0:
-            failures.append(
-                f"K=8 CVaR solve costs "
-                f"{by_name['sim_ensemble_solve_cost_ratio']:.2f}x the K=1 "
-                "solve (>= 4x: the member axis is no longer amortized)")
-        if by_name["sim_joint_solve_cost_ratio"] >= 3.0:
-            failures.append(
-                f"joint spatio-temporal solve costs "
-                f"{by_name['sim_joint_solve_cost_ratio']:.2f}x the "
-                "temporal-only solve (>= 3x)")
-        if by_name["sim_joint_carbon_delta_pct"] < -1e-6:
-            failures.append(
-                f"joint solve emits "
-                f"{-by_name['sim_joint_carbon_delta_pct']:.4f}% MORE carbon "
-                "than the sequential pre-shift (the best-of safeguard in "
-                "spatial.solve_joint is broken)")
-        if by_name["sim_stream_slowdown_h364_vs_h56"] > 1.3:
-            failures.append(
-                f"streaming day-step slows down "
-                f"{by_name['sim_stream_slowdown_h364_vs_h56']:.2f}x from "
-                "H=56 to H=364 (> 1.3x: the streaming path is no longer "
-                "O(1) in history length)")
-        if by_name["sim_streaming_forecast_drift"] >= 0.35:
-            failures.append(
-                f"streaming-vs-rescan forecast drift "
-                f"{by_name['sim_streaming_forecast_drift']:.3f} >= 0.35 "
-                "over the 14-day dual run (the streaming estimators "
-                "forked from the rescan pipeline)")
-        if by_name["sim_predictor_vs_hist_bytes_h364"] >= 1.0:
-            failures.append(
-                "PredictorState is not strictly smaller than the seven "
-                "replaced hist_* arrays at H=364 "
-                f"(ratio {by_name['sim_predictor_vs_hist_bytes_h364']:.3f})")
+        _gate(failures, by_name["sim_batched_speedup"], ">=", 1.5,
+              "batched engine speedup (x) over the legacy loop regressed")
+        _gate(failures, by_name["sim_legacy_engine_drift"], "<=", 1e-5,
+              "legacy/engine drift: the two day-cycle paths forked")
+        _gate(failures, by_name["sim_ensemble_solve_cost_ratio"], "<", 4.0,
+              "K=8 CVaR solve cost over the K=1 solve: the member axis "
+              "is no longer amortized")
+        _gate(failures, by_name["sim_joint_solve_cost_ratio"], "<", 3.0,
+              "joint spatio-temporal solve cost over the temporal-only "
+              "solve")
+        _gate(failures, by_name["sim_joint_carbon_delta_pct"], ">=", -1e-6,
+              "joint solve emits MORE carbon than the sequential "
+              "pre-shift (the best-of safeguard in spatial.solve_joint "
+              "is broken)")
+        _gate(failures, by_name["sim_stream_slowdown_h364_vs_h56"], "<=",
+              1.3,
+              "streaming day-step slowdown from H=56 to H=364: the "
+              "streaming path is no longer O(1) in history length")
+        _gate(failures, by_name["sim_streaming_forecast_drift"], "<", 0.35,
+              "streaming-vs-rescan forecast drift over the 14-day dual "
+              "run (the streaming estimators forked from the rescan "
+              "pipeline)")
+        _gate(failures, by_name["sim_predictor_vs_hist_bytes_h364"], "<",
+              1.0,
+              "PredictorState is not strictly smaller than the seven "
+              "replaced hist_* arrays at H=364")
+        _gate(failures, by_name["sim_telemetry_hlo_identical"], ">=", 1.0,
+              "telemetry-off day-step HLO is no longer byte-identical "
+              "to the pre-telemetry legacy graph (collapse contract)")
+        _gate(failures, by_name["sim_telemetry_overhead_pct"], "<", 15.0,
+              "telemetry-on rollout overhead (%) over telemetry-off")
         for name, val, _ in rows:
             # Rollout-level tripwire, NOT a structural property: the
             # best-of safeguard guarantees plan-level dominance (gated
@@ -535,11 +639,10 @@ def main():
             # either way. A generous tolerance catches gross regressions
             # (joint plans that systematically realize worse) without
             # flaking on admission-path noise.
-            if name.endswith("_joint_vs_seq_pct") and val < -0.5:
-                failures.append(
-                    f"{name} = {val:.3f}%: joint rollouts emitted "
-                    "substantially more carbon than sequential pre-shift "
-                    "rollouts")
+            if name.endswith("_joint_vs_seq_pct"):
+                _gate(failures, val, ">=", -0.5,
+                      f"{name}: joint rollouts emitted substantially "
+                      "more carbon than sequential pre-shift rollouts")
         if BENCH_PATH.exists():
             # Ratcheting per-member regression gate, machine-normalized:
             # the K=8-vs-K=1 cost ratio is a same-run relative measure,
@@ -554,12 +657,13 @@ def main():
             # cross-machine wall-clock comparisons flake.
             base = json.loads(BENCH_PATH.read_text())
             base_ratio = base.get("ensemble_solve_cost_ratio")
-            cur_ratio = by_name["sim_ensemble_solve_cost_ratio"]
-            if base_ratio and cur_ratio > 1.5 * base_ratio:
-                failures.append(
-                    f"per-member ensemble throughput regressed: K=8/K=1 "
-                    f"solve cost ratio {cur_ratio:.2f}x is > 1.5x the "
-                    f"committed BENCH_sim.json baseline {base_ratio:.2f}x")
+            if base_ratio:
+                _gate(failures,
+                      by_name["sim_ensemble_solve_cost_ratio"], "<=",
+                      1.5 * base_ratio,
+                      "per-member ensemble throughput regressed vs the "
+                      f"committed BENCH_sim.json baseline ratio "
+                      f"{base_ratio:.2f}x")
         if failures:
             for f in failures:
                 print(f"FAIL: {f}", file=sys.stderr)

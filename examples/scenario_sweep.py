@@ -36,6 +36,13 @@ carbon the joint optimizer saves over the sequential two-phase baseline;
 mobility=0 is the temporal-only control row (the shift is pinned to
 zero; the joint path may still refine delta, so the rows agree to float
 tolerance, not bitwise).
+
+``--telemetry`` reruns the default library with the in-graph
+DayTelemetry record stacked into the rollout (`SimConfig(telemetry=
+True)`) and prints a second table of solver convergence and forecast
+calibration per scenario (see README "Observability"); ``--trace PATH``
+additionally exports the raw per scenario x seed x day records as JSONL
+— the same artifact CI uploads from the bench smoke job.
 """
 import argparse
 import time
@@ -43,11 +50,12 @@ import time
 import jax
 
 from repro.sim import (MOBILITY_COLUMNS, RISK_COLUMNS, RISK_MEMBERS,
-                       SimConfig, build_batch, default_library,
-                       format_table, mobility_sweep_library,
-                       mobility_sweep_rows, risk_sweep_library,
-                       risk_sweep_rows, rollout_batch,
-                       rollout_batch_sharded, scenario_rows)
+                       SimConfig, TELEMETRY_COLUMNS, build_batch,
+                       default_library, format_table,
+                       mobility_sweep_library, mobility_sweep_rows,
+                       risk_sweep_library, risk_sweep_rows, rollout_batch,
+                       rollout_batch_sharded, scenario_rows,
+                       telemetry_records, telemetry_rows, write_jsonl)
 
 
 def run_risk_sweep(args):
@@ -119,11 +127,22 @@ def main():
                     help="run the mobility-sweep family through the joint "
                          "spatio-temporal optimizer vs the sequential "
                          "pre-shift")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="stack the in-graph DayTelemetry record per day "
+                         "(SimConfig(telemetry=True)) and print the "
+                         "per-scenario solver/forecast diagnostics table")
+    ap.add_argument("--trace", type=str, default=None, metavar="PATH",
+                    help="with --telemetry: also write the per scenario x "
+                         "seed x day trace records to PATH as JSONL")
     args = ap.parse_args()
     if args.days < 1 or args.seeds < 1:
         ap.error("--days and --seeds must be >= 1")
     if args.risk and args.spatial:
         ap.error("--risk and --spatial are mutually exclusive")
+    if args.trace and not args.telemetry:
+        ap.error("--trace requires --telemetry")
+    if args.telemetry and (args.risk or args.spatial):
+        ap.error("--telemetry applies to the default scenario library")
     if args.risk:
         run_risk_sweep(args)
         return
@@ -132,7 +151,8 @@ def main():
         return
 
     cfg = SimConfig(n_clusters=args.clusters, n_campuses=4, n_zones=4,
-                    pds_per_cluster=2, hist_days=args.hist)
+                    pds_per_cluster=2, hist_days=args.hist,
+                    telemetry=args.telemetry)
     scenarios = default_library(args.days)
     seeds = list(range(args.seeds))
     mode = (f"shard_map'd over {len(jax.devices())} device(s)"
@@ -145,7 +165,7 @@ def main():
     run = (rollout_batch_sharded if args.sharded
            else rollout_batch)(cfg, args.days)
     t0 = time.time()
-    _, ledgers, _ = run(batch)
+    _, ledgers, traj = run(batch)
     jax.block_until_ready(ledgers)
     wall = time.time() - t0
     n_rollouts = len(scenarios) * len(seeds)
@@ -157,6 +177,20 @@ def main():
     print("\n(+carbonSaved% = shaped fleet emitted less than the unshaped "
           "counterfactual; flex<24h% = flexible work completed within a "
           "day, paper SLO)")
+
+    if args.telemetry:
+        records = telemetry_records(traj["telemetry"],
+                                    [s.name for s in scenarios], len(seeds))
+        print()
+        print(format_table(telemetry_rows(records), TELEMETRY_COLUMNS))
+        print("\n(objDec% = PGD objective decrease across the dual-ascent "
+              "rounds; thetaCov/uifQCov = forecast-bound coverage of the "
+              "realized day; vccBind = fraction of hours admission is "
+              "pinned at the VCC; queueAge = backlog in days of service)")
+        if args.trace:
+            write_jsonl(args.trace, records)
+            print(f"\n{len(records)} trace records "
+                  f"(scenario x seed x day) -> {args.trace}")
 
 
 if __name__ == "__main__":

@@ -60,6 +60,10 @@ class FleetConfig:
     #                               (FleetState.pred carries the
     #                               stats.PredictorState; the hist_*
     #                               windows become zero-length stubs)
+    telemetry: bool = False       # True = day_cycle records a
+    #                               sim.telemetry DayTelemetry under
+    #                               record["telemetry"]; False keeps the
+    #                               legacy compiled graph byte-identical
     slo: slo.SLOConfig = field(default_factory=slo.SLOConfig)
 
 
@@ -100,7 +104,8 @@ class FleetState:
 def _stage_cfg(cfg: FleetConfig) -> stages.StageConfig:
     return stages.StageConfig(slo_margin=cfg.slo.margin,
                               slo_pause_days=cfg.slo.pause_days,
-                              streaming=cfg.streaming)
+                              streaming=cfg.streaming,
+                              telemetry=cfg.telemetry)
 
 
 # --------------------------------------------- FleetState <-> stage pytrees
@@ -358,5 +363,6 @@ def day_cycle(state: FleetState, record: Optional[dict] = None
     if record is not None:
         record.update(dict(fc=out.fc, sol=out.sol, vcc=out.vcc_curve,
                            result=out.res, cf_result=out.cf,
-                           intensity=out.eta_act, problem=out.prob))
+                           intensity=out.eta_act, problem=out.prob,
+                           telemetry=out.telemetry))
     return state

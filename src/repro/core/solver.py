@@ -107,18 +107,28 @@ def campus_dual_update(mu, y, campus, campus_limit, rho):
                     / jnp.clip(campus_limit, 1e-9, None), 0.0, None)
 
 
-def dual_ascent(inner, dual_update, x0, mu0, outer_iters: int):
+def dual_ascent(inner, dual_update, x0, mu0, outer_iters: int,
+                diag_fn=None):
     """Generic outer loop: ``outer_iters`` rounds of [x = inner(x, mu);
     mu = dual_update(x, mu)] under lax.scan. ``x`` may be any pytree
-    (the joint solve carries a (delta, s) tuple)."""
+    (the joint solve carries a (delta, s) tuple).
+
+    ``diag_fn(x_prev, x_new, mu_new) -> pytree`` (optional) emits one
+    per-round diagnostic record through the scan's ys; the return becomes
+    ``(x, mu, ys)`` with each ys leaf stacked (outer_iters, ...). With
+    ``diag_fn=None`` the traced graph is EXACTLY the legacy two-value
+    scan (the telemetry=off collapse contract rides on this)."""
     def outer(carry, _):
         x, mu = carry
-        x = inner(x, mu)
-        mu = dual_update(x, mu)
-        return (x, mu), None
+        x_new = inner(x, mu)
+        mu = dual_update(x_new, mu)
+        y = None if diag_fn is None else diag_fn(x, x_new, mu)
+        return (x_new, mu), y
 
-    (x, mu), _ = jax.lax.scan(outer, (x0, mu0), None, length=outer_iters)
-    return x, mu
+    (x, mu), ys = jax.lax.scan(outer, (x0, mu0), None, length=outer_iters)
+    if diag_fn is None:
+        return x, mu
+    return x, mu, ys
 
 
 # ---------------------------------------------------------- epoch dispatch

@@ -118,8 +118,8 @@ def solve_joint(p: VCCProblem, mobility, *, inner_iters: int = 80,
                 outer_iters: int = 20, joint_inner: int = 25,
                 joint_outer: int = 8, lr: float = 0.5, lr_s: float = 0.15,
                 temp_frac: float = 0.02, rho: float = 0.2,
-                use_pallas: Optional[bool] = None, interpret: bool = False
-                ) -> Tuple[VCCSolution, jnp.ndarray, jnp.ndarray]:
+                use_pallas: Optional[bool] = None, interpret: bool = False,
+                telemetry: bool = False):
     """Joint spatio-temporal VCC optimization.
 
     Returns (solution, tau_joint (n,), s (n,)): the temporal deviations
@@ -148,12 +148,26 @@ def solve_joint(p: VCCProblem, mobility, *, inner_iters: int = 80,
          off in supply-tight regimes (see
          ``vcc.synthetic_zonal_problem`` / the capacity-squeezed
          mobility sweep), which is where the gates measure it.
+
+    ``telemetry=True`` appends a solver-diagnostics dict to the return
+    (``(sol, tau_j, s, diag)``): the warm-start temporal solve's
+    convergence trajectories, ``vcc.solution_diagnostics`` at the FINAL
+    joint-consistent point, and ``joint_winner`` — 1.0 when the best-of
+    safeguard kept the joint refinement, 0.0 when it fell back to the
+    sequential warm start (the static mobility==0 collapse reports 0.0:
+    the joint path never ran). ``telemetry=False`` (default) traces the
+    exact legacy graph.
     """
     if not isinstance(mobility, jnp.ndarray) and float(mobility) == 0.0:
         sol = vcc.solve_vcc(p, inner_iters=inner_iters,
                             outer_iters=outer_iters, lr=lr,
                             temp_frac=temp_frac, rho=rho,
-                            use_pallas=use_pallas, interpret=interpret)
+                            use_pallas=use_pallas, interpret=interpret,
+                            telemetry=telemetry)
+        if telemetry:
+            sol, diag = sol
+            diag["joint_winner"] = jnp.zeros((), f32)
+            return sol, p.tau, jnp.zeros_like(p.tau), diag
         return sol, p.tau, jnp.zeros_like(p.tau)
 
     mob = jnp.asarray(mobility, f32)
@@ -163,7 +177,11 @@ def solve_joint(p: VCCProblem, mobility, *, inner_iters: int = 80,
     sol_seq = vcc.solve_vcc(p_seq, inner_iters=inner_iters,
                             outer_iters=outer_iters, lr=lr,
                             temp_frac=temp_frac, rho=rho,
-                            use_pallas=use_pallas, interpret=interpret)
+                            use_pallas=use_pallas, interpret=interpret,
+                            telemetry=telemetry)
+    diag_seq = None
+    if telemetry:
+        sol_seq, diag_seq = sol_seq
     lo_s, ub_s = shift_bounds(p, mob)
     s0 = jnp.clip(tau_sh - p.tau, lo_s, ub_s)
 
@@ -212,6 +230,13 @@ def solve_joint(p: VCCProblem, mobility, *, inner_iters: int = 80,
                           pf.capacity[:, None])
     sol = VCCSolution(delta=delta, y=y, vcc=vcc_curve, shaped=feasible,
                       mu=mu, objective=joint_objective(p, delta, s, mu))
+    if telemetry:
+        diag = {"obj_cluster_traj": diag_seq["obj_cluster_traj"],
+                "step_max_traj": diag_seq["step_max_traj"],
+                **vcc.solution_diagnostics(pf, delta, mu,
+                                           temp_frac=temp_frac),
+                "joint_winner": take.astype(f32)}
+        return sol, tau_j, s, diag
     return sol, tau_j, s
 
 

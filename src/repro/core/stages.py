@@ -201,6 +201,10 @@ class StepOut(NamedTuple):
     fc: Dict[str, jnp.ndarray]        # forecast dict
     prob: vcc.VCCProblem              # problem actually optimized
     eta_act: jnp.ndarray              # (n, 24) actual intensity per cluster
+    # DayTelemetry record (sim.telemetry) when StageConfig.telemetry; the
+    # default None flattens to an EMPTY pytree subtree, so the legacy
+    # (telemetry=False) compiled graph stays byte-identical
+    telemetry: Optional[object] = None
 
 
 @dataclass(frozen=True)
@@ -226,6 +230,13 @@ class StageConfig:
     #                               byte-identical (golden trace)
     use_pallas: Optional[bool] = None   # VCC PGD kernel dispatch (None=auto)
     interpret: bool = False             # Pallas interpreter (CPU tests)
+    telemetry: bool = False       # True = thread a sim.telemetry
+    #                               DayTelemetry record (solver
+    #                               convergence, forecast calibration,
+    #                               SLO/headroom gauges) through the day
+    #                               step; False keeps the compiled graph
+    #                               byte-identical to the legacy day
+    #                               (collapse contract, HLO-tested)
 
 
 def pd_truth(params: SimParams) -> power.PDTruth:
@@ -370,8 +381,7 @@ def build_problem_arrays(fc, eta_fc, power_fn, slope_fn, queue, u_pow_cap,
 
 def optimize_stage(cfg: StageConfig, fc, eta_fc, model: PowerModel, queue,
                    u_pow_cap, cap_day, campus, campus_limit, lambda_e,
-                   lambda_p, mobility, ens: Optional[Dict] = None
-                   ) -> Tuple[vcc.VCCProblem, vcc.VCCSolution]:
+                   lambda_p, mobility, ens: Optional[Dict] = None):
     """Fleetwide risk-aware VCC optimization. The PGD machinery is the
     ``core.solver`` layer throughout; kernels dispatch per
     cfg.use_pallas/interpret.
@@ -398,31 +408,60 @@ def optimize_stage(cfg: StageConfig, fc, eta_fc, model: PowerModel, queue,
     the point-forecast objective (under ``joint_spatial`` the joint solve
     places the budgets on the point forecast, then the CVaR solve shapes
     at the shifted budgets). With ens=None and joint_spatial=False this
-    graph is IDENTICAL to the pre-ensemble day cycle."""
+    graph is IDENTICAL to the pre-ensemble day cycle.
+
+    Returns ``(prob, sol, diag)``: ``diag`` is the solver-telemetry dict
+    (``vcc.solve_vcc(..., telemetry=True)`` channels + ``joint_winner``)
+    when ``cfg.telemetry``, else ``None`` — and the telemetry=False path
+    calls the solvers EXACTLY as before (byte-identical graph)."""
     prob = build_problem_arrays(
         fc, eta_fc,
         lambda u: model_power(model, u), lambda u: model_slope(model, u),
         queue, u_pow_cap, cap_day, campus, campus_limit, lambda_e, lambda_p)
     prob = jax.lax.optimization_barrier(prob)
+    diag = None
     if cfg.joint_spatial:
-        sol, tau_j, _ = spatial.solve_joint(prob, mobility,
-                                            use_pallas=cfg.use_pallas,
-                                            interpret=cfg.interpret)
+        if cfg.telemetry:
+            sol, tau_j, _, diag = spatial.solve_joint(
+                prob, mobility, use_pallas=cfg.use_pallas,
+                interpret=cfg.interpret, telemetry=True)
+        else:
+            sol, tau_j, _ = spatial.solve_joint(prob, mobility,
+                                                use_pallas=cfg.use_pallas,
+                                                interpret=cfg.interpret)
         sol, tau_j = jax.lax.optimization_barrier((sol, tau_j))
         prob = dataclasses.replace(prob, tau=tau_j)
         if ens is not None:
             prob = risk.attach_ensemble(prob, **ens)
-            sol = vcc.solve_vcc(prob, use_pallas=cfg.use_pallas,
-                                interpret=cfg.interpret)
-        return prob, sol
+            if cfg.telemetry:
+                # the CVaR solve at the shifted budgets produces the final
+                # delta: report ITS convergence, keep the joint verdict
+                sol, diag2 = vcc.solve_vcc(prob, use_pallas=cfg.use_pallas,
+                                           interpret=cfg.interpret,
+                                           telemetry=True)
+                diag = {**diag2, "joint_winner": diag["joint_winner"]}
+            else:
+                sol = vcc.solve_vcc(prob, use_pallas=cfg.use_pallas,
+                                    interpret=cfg.interpret)
+        if diag is not None:
+            diag = jax.lax.optimization_barrier(diag)
+        return prob, sol, diag
     tau_shifted, _ = spatial.spatial_shift(prob, mobility=mobility)
     tau_shifted = jax.lax.optimization_barrier(tau_shifted)
     prob = dataclasses.replace(prob, tau=tau_shifted)
     if ens is not None:
         prob = risk.attach_ensemble(prob, **ens)
-    sol = vcc.solve_vcc(prob, use_pallas=cfg.use_pallas,
-                        interpret=cfg.interpret)
-    return prob, sol
+    if cfg.telemetry:
+        sol, diag = vcc.solve_vcc(prob, use_pallas=cfg.use_pallas,
+                                  interpret=cfg.interpret, telemetry=True)
+        # the sequential path never runs the joint refinement: report the
+        # degenerate 0.0 so the telemetry pytree is config-independent
+        diag["joint_winner"] = jnp.zeros((), f32)
+        diag = jax.lax.optimization_barrier(diag)
+    else:
+        sol = vcc.solve_vcc(prob, use_pallas=cfg.use_pallas,
+                            interpret=cfg.interpret)
+    return prob, sol, diag
 
 
 def barrier_result(res: admission.DayResult) -> admission.DayResult:
@@ -521,7 +560,7 @@ def make_day_step(cfg: StageConfig):
                 state.hist_uif_pred, state.hist_uif, fc_z,
                 state.carbon_hist, state.zmap, params.risk_beta)
         # 4. fleetwide risk-aware VCC optimization (+ spatial pre-shift)
-        prob, sol = optimize_stage(
+        prob, sol, sdiag = optimize_stage(
             cfg, fc, eta_fc, model, state.queue,
             state.u_pow_cap * xs["cap_scale"], cap_day, state.campus,
             state.campus_limit * xs["campus_scale"],
@@ -576,9 +615,27 @@ def make_day_step(cfg: StageConfig):
             shaping_allowed=allowed,
             **telemetry,
         )
+        # 8. DayTelemetry record (telemetry=False leaves the default None
+        # StepOut leaf -> empty pytree subtree -> unchanged compiled graph)
+        telem = None
+        if cfg.telemetry:
+            # lazy: core must not import repro.sim at module level
+            from repro.sim import telemetry as _telemetry
+            if cfg.streaming:
+                trail = {"uif": state.pred.uif_day_ring,
+                         "tuf": state.pred.flex_ring,
+                         "tr": state.pred.res_ring}
+            else:
+                trail = {"uif": hour_sum(state.hist_uif[:, -7:]),
+                         "tuf": state.hist_flex_daily[:, -7:],
+                         "tr": state.hist_res_daily[:, -7:]}
+            telem = _telemetry.day_telemetry(
+                sdiag, fc, res, u_if, vcc_curve,
+                pause_left=new_slo["pause_left"], shaped=sol.shaped,
+                trail=trail)
         return new_state, StepOut(res=res, cf=cf, sol=sol,
                                   vcc_curve=vcc_curve, fc=fc, prob=prob,
-                                  eta_act=eta_act)
+                                  eta_act=eta_act, telemetry=telem)
 
     return step
 

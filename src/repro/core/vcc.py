@@ -33,6 +33,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import solver
+from repro.core.admission import hour_sum
+from repro.kernels.vcc_pgd import ref as _pgd_ref
 
 f32 = jnp.float32
 
@@ -140,10 +142,69 @@ def objective(p: VCCProblem, delta, mu, *, risk: bool = True):
     return carbon + jnp.sum(peak_price * y)
 
 
+def cluster_objective(p: VCCProblem, delta):
+    """Per-cluster nominal (eq. 4, mu-free primal) day cost of ``delta``:
+    lambda_e * sum_h eta * pow + lambda_p * max_h pow, as an (n,) vector.
+    Ordered reductions only (``hour_sum``; max is order-exact), so the
+    telemetry channels built from it stay bitwise batch-invariant."""
+    pow_h = cluster_power(p, delta)
+    return p.lambda_e * hour_sum(p.eta * pow_h) \
+        + p.lambda_p * pow_h.max(axis=1)
+
+
+def solution_diagnostics(p: VCCProblem, delta, mu, *,
+                         temp_frac: float = 0.02, proj_iters: int = 50):
+    """Post-solve convergence residuals of ``(delta, mu)`` — the in-graph
+    solver telemetry channels. Elementwise + ordered reductions only
+    (bitwise batch-invariant; the cluster axis is NOT reduced — host-side
+    consumers reduce it).
+
+    Returns a dict of arrays:
+      * ``conservation_resid`` (n,) — |sum_h delta| per cluster, the
+        residual the bisection projection drives to ~0.
+      * ``proj_nu_tol`` (n,) — certified tolerance of the conservation
+        projection's nu bisection at the solution: the initial bracket
+        width (``kernels.vcc_pgd.ref.project_row``'s [a, b]) halved
+        ``proj_iters`` times.
+      * ``dual_resid`` (n_dc,) — relative campus-contract overshoot
+        max(0, (sum_c y - L) / L) at the final point (0 = the campus
+        dual ascent converged feasibly).
+      * ``cvar_tail_mass`` (n,) — max soft-CVaR member weight per cluster
+        at the final delta (K > 1 problems; 1/K = risk-neutral-uniform,
+        -> 1 = the tilt concentrates on one worst member). Point-forecast
+        problems report the degenerate 1.0.
+    """
+    conservation = jnp.abs(hour_sum(delta))
+    lo, ub, feasible = delta_bounds(p)
+    lo = jnp.where(feasible[:, None], lo, 0.0)
+    ub = jnp.where(feasible[:, None], ub, 0.0)
+    width0 = jnp.clip((delta.max(axis=1) - lo.min(axis=1))
+                      - (delta.min(axis=1) - ub.max(axis=1)), 0.0, None)
+    proj_tol = width0 * (2.0 ** -proj_iters)
+    y = cluster_power(p, delta).max(axis=1)
+    campus_pow = jax.ops.segment_sum(y, p.campus,
+                                     num_segments=p.campus_limit.shape[0])
+    dual_resid = jnp.clip((campus_pow - p.campus_limit)
+                          / jnp.clip(p.campus_limit, 1e-9, None), 0.0, None)
+    if p.eta_ens is not None and p.eta_ens.shape[0] > 1:
+        tau24 = jnp.clip(p.tau[:, None] / 24.0, 1e-9, None)
+        price = (p.lambda_p + mu[p.campus])[:, None]
+        temp = solver.peak_temperature(p.pow_nom, temp_frac)
+        cost, _, _ = _pgd_ref.member_costs(
+            delta, p.eta_ens, p.pi, p.pow_nom_ens, tau24, price, temp,
+            p.lambda_e)
+        tail = _pgd_ref.cvar_member_weights(
+            cost, _pgd_ref.cvar_sharpness(p.risk_beta)).max(axis=0)
+    else:
+        tail = jnp.ones_like(p.tau)
+    return {"conservation_resid": conservation, "proj_nu_tol": proj_tol,
+            "dual_resid": dual_resid, "cvar_tail_mass": tail}
+
+
 def solve_vcc(p: VCCProblem, *, inner_iters: int = 80, outer_iters: int = 20,
               lr: float = 0.5, temp_frac: float = 0.02, rho: float = 0.2,
               use_pallas: Optional[bool] = None,
-              interpret: bool = False) -> VCCSolution:
+              interpret: bool = False, telemetry: bool = False):
     """Solve the fleetwide VCC problem (eq. 4).
 
     Assembly over ``repro.core.solver``: scaled-lr PGD epochs
@@ -160,6 +221,14 @@ def solve_vcc(p: VCCProblem, *, inner_iters: int = 80, outer_iters: int = 20,
     ``VCCSolution.objective`` is always the nominal eq. 4 cost of the
     chosen delta (comparable across risk settings; the risk value is
     ``risk.cvar_objective``).
+
+    ``telemetry=True`` returns ``(solution, diag)`` where ``diag`` adds
+    the solver convergence channels: per-outer-round per-cluster nominal
+    objective (``obj_cluster_traj`` (outer_iters, n)) and max step
+    (``step_max_traj`` (outer_iters, n)) from the dual-ascent scan, plus
+    ``solution_diagnostics`` at the final point. The default
+    ``telemetry=False`` path traces the EXACT legacy graph (byte-identical
+    compiled HLO — the repo's collapse contract, tested).
     """
     if p.eta_ens is not None and p.eta_ens.shape[0] == 1:
         p = dataclasses.replace(p, eta_ens=None, pow_nom_ens=None)
@@ -183,17 +252,33 @@ def solve_vcc(p: VCCProblem, *, inner_iters: int = 80, outer_iters: int = 20,
         return solver.campus_dual_update(mu, y, p.campus, p.campus_limit,
                                          rho)
 
-    delta, mu = solver.dual_ascent(inner, dual_update,
-                                   jnp.zeros((n, H), f32),
-                                   jnp.zeros((n_dc,), f32), outer_iters)
+    if telemetry:
+        def diag_fn(d_prev, d_new, _mu):
+            return {"obj_cluster": cluster_objective(p, d_new),
+                    "step_max": jnp.abs(d_new - d_prev).max(axis=1)}
+
+        delta, mu, traj = solver.dual_ascent(inner, dual_update,
+                                             jnp.zeros((n, H), f32),
+                                             jnp.zeros((n_dc,), f32),
+                                             outer_iters, diag_fn=diag_fn)
+    else:
+        delta, mu = solver.dual_ascent(inner, dual_update,
+                                       jnp.zeros((n, H), f32),
+                                       jnp.zeros((n_dc,), f32), outer_iters)
     pow_h = cluster_power(p, delta)
     y = pow_h.max(axis=1)
     vcc_shaped = (p.u_if + (1.0 + delta) * p.tau[:, None] / 24.0) * p.ratio
     vcc = jnp.where(feasible[:, None],
                     jnp.minimum(vcc_shaped, p.capacity[:, None]),
                     p.capacity[:, None])
-    return VCCSolution(delta=delta, y=y, vcc=vcc, shaped=feasible, mu=mu,
-                       objective=objective(p, delta, mu, risk=False))
+    sol = VCCSolution(delta=delta, y=y, vcc=vcc, shaped=feasible, mu=mu,
+                      objective=objective(p, delta, mu, risk=False))
+    if not telemetry:
+        return sol
+    diag = {"obj_cluster_traj": traj["obj_cluster"],
+            "step_max_traj": traj["step_max"],
+            **solution_diagnostics(p, delta, mu, temp_frac=temp_frac)}
+    return sol, diag
 
 
 def solve_vcc_batched(p: VCCProblem, **kw) -> VCCSolution:

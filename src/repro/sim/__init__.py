@@ -17,7 +17,13 @@ from repro.sim.scenarios import (Scenario, build_params, build_batch,
                                  RISK_BETAS, RISK_MEMBERS)
 from repro.sim.report import (scenario_rows, format_table,
                               mobility_sweep_rows, risk_sweep_rows,
-                              state_nbytes, MOBILITY_COLUMNS, RISK_COLUMNS)
+                              state_nbytes, telemetry_rows,
+                              MOBILITY_COLUMNS, RISK_COLUMNS,
+                              TELEMETRY_COLUMNS)
+from repro.sim.telemetry import (DayTelemetry, day_telemetry,
+                                 telemetry_records, write_jsonl, read_jsonl,
+                                 profile_stages, format_stage_table,
+                                 TRACE_FIELDS)
 
 __all__ = [
     "SimConfig", "SimParams", "SimState", "make_init", "make_day_step",
@@ -28,5 +34,8 @@ __all__ = [
     "mobility_sweep_library", "risk_sweep_library", "MOBILITY_SWEEP",
     "RISK_BETAS", "RISK_MEMBERS",
     "scenario_rows", "format_table", "mobility_sweep_rows",
-    "risk_sweep_rows", "state_nbytes", "MOBILITY_COLUMNS", "RISK_COLUMNS",
+    "risk_sweep_rows", "state_nbytes", "telemetry_rows",
+    "MOBILITY_COLUMNS", "RISK_COLUMNS", "TELEMETRY_COLUMNS",
+    "DayTelemetry", "day_telemetry", "telemetry_records", "write_jsonl",
+    "read_jsonl", "profile_stages", "format_stage_table", "TRACE_FIELDS",
 ]

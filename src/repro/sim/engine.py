@@ -64,13 +64,20 @@ class SimConfig:
     #                               hist_days — year-scale rollouts);
     #                               False = the legacy rescan graph
     #                               (golden-trace pinned)
+    telemetry: bool = False       # True = stack a sim.telemetry
+    #                               DayTelemetry record per day into the
+    #                               rollout traj (solver convergence +
+    #                               forecast calibration + SLO gauges);
+    #                               False = the legacy graph, byte-
+    #                               identical compiled HLO (tested)
 
     def stage_config(self) -> stages.StageConfig:
         return stages.StageConfig(slo_margin=self.slo_margin,
                                   slo_pause_days=self.slo_pause_days,
                                   joint_spatial=self.joint_spatial,
                                   n_members=self.n_members,
-                                  streaming=self.streaming)
+                                  streaming=self.streaming,
+                                  telemetry=self.telemetry)
 
 
 def _metrics(res, cf) -> DayMetrics:
@@ -131,6 +138,11 @@ def make_rollout(cfg: SimConfig, days: int):
                     "kwh": _hsum(metrics.kwh),
                     "peak_kw": _hsum(metrics.peak_kw),
                     "queue": _hsum(metrics.queue_end)}
+            if cfg.telemetry:
+                # stacked by the scan -> (days, ...) DayTelemetry leaves
+                # (telemetry=False keeps the traj keys — and graph —
+                # exactly the legacy ones)
+                traj["telemetry"] = out.telemetry
             return (s, led), traj
 
         xs = jax.tree.map(lambda a: a[:days], _day_xs(params))

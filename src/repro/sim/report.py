@@ -47,7 +47,10 @@ def scenario_rows(ledgers: Ledger, scenario_names: Sequence[str],
         for k, v in summaries.items():
             vals = np.asarray(v[sl], dtype=np.float64)
             row[k] = float(vals.mean())
-            row[k + "_std"] = float(vals.std())
+            # seeds are a SAMPLE of the scenario's rollout distribution:
+            # Bessel-corrected std (ddof=1); a single seed pins 0.0 (an
+            # n=1 sample has no spread estimate), never NaN
+            row[k + "_std"] = float(vals.std(ddof=1)) if n_seeds > 1 else 0.0
         rows.append(row)
     return rows
 
@@ -58,6 +61,37 @@ RISK_COLUMNS = ("carbon_saved_pct", "flex_completion_pct",
 
 MOBILITY_COLUMNS = ("carbon_saved_pct", "carbon_vs_sequential_pct",
                     "peak_reduction_pct", "flex_within_24h_pct")
+
+
+TELEMETRY_COLUMNS = ("obj_decrease_pct", "uif_mape", "theta_coverage",
+                     "uifq_coverage", "vcc_binding_frac", "queue_age_max")
+
+
+def telemetry_rows(records, scenario_names: Optional[Sequence[str]] = None
+                   ) -> List[Dict[str, float]]:
+    """Per-scenario mean +/- std of the telemetry trace records
+    (``telemetry.telemetry_records`` — one record per scenario x seed x
+    day). The std pools seeds AND days (sample std, ddof=1 when more
+    than one record contributes; a single record pins 0.0). Rows render
+    with ``format_table(rows, TELEMETRY_COLUMNS)``."""
+    by_scen: Dict[str, List[dict]] = {}
+    for r in records:
+        by_scen.setdefault(r["scenario"], []).append(r)
+    names = scenario_names if scenario_names is not None else by_scen
+    rows: List[Dict[str, float]] = []
+    for name in names:
+        rs = by_scen.get(name, [])
+        if not rs:
+            continue
+        keys = [k for k in rs[0] if k not in ("scenario", "seed", "day")]
+        row: Dict[str, float] = {"scenario": name, "n_records": len(rs)}
+        for k in keys:
+            vals = np.asarray([r[k] for r in rs], dtype=np.float64)
+            row[k] = float(vals.mean())
+            row[k + "_std"] = \
+                float(vals.std(ddof=1)) if len(rs) > 1 else 0.0
+        rows.append(row)
+    return rows
 
 
 def mobility_sweep_rows(led_joint: Ledger, led_seq: Ledger,
@@ -107,7 +141,13 @@ def format_table(rows: List[Dict[str, float]],
                "flex_within_24h_pct": "flex<24h%",
                "flex_completion_pct": "flexDone%",
                "kwh_saved_pct": "kwhSaved%",
-               "delayed_cpu_h_per_day": "delayedCPUh/d"}
+               "delayed_cpu_h_per_day": "delayedCPUh/d",
+               "obj_decrease_pct": "objDec%",
+               "uif_mape": "uifMAPE",
+               "theta_coverage": "thetaCov",
+               "uifq_coverage": "uifQCov",
+               "vcc_binding_frac": "vccBind",
+               "queue_age_max": "queueAge"}
     cols = [headers.get(c, c) for c in columns]
     widths = [max(len(c), 12) for c in cols]
     out = ["scenario".ljust(name_w)

@@ -1,0 +1,379 @@
+"""Fleet telemetry layer: in-scan diagnostics + host-side trace export.
+
+The measurement plane of the reproduction — three surfaces:
+
+* **In-graph** (`DayTelemetry`, `day_telemetry`): a pytree record built
+  inside the jitted day step when ``StageConfig.telemetry=True``. Solver
+  convergence channels come from ``core.vcc.solve_vcc(telemetry=True)``
+  (PGD objective/step trajectories through the dual-ascent scan,
+  conservation/dual residuals, certified bisection tolerance, CVaR tail
+  mass, joint-vs-sequential winner); forecast calibration (MAPE / bias /
+  coverage of the day-ahead U_IF, T_UF, T_R and Theta forecasts against
+  the realized day, plus a streaming-vs-rescan drift gauge against the
+  trailing week) and SLO/headroom gauges (hourly VCC binding fraction,
+  queue age) are computed here from the observe/SLO stage products. Every
+  channel uses elementwise ops + ordered trailing-axis reductions
+  (``admission.hour_sum``) and keeps the cluster axis unreduced, so the
+  record rides ``lax.scan`` / ``vmap`` / ``shard_map`` without breaking
+  the engine's bitwise batched==sequential parity contract. With the flag
+  off the StepOut leaf stays ``None`` (an EMPTY pytree subtree): the
+  legacy compiled graph is byte-identical (HLO-tested collapse contract).
+
+* **Trace export** (`telemetry_records`, `write_jsonl`, `read_jsonl`):
+  flatten a batched rollout's stacked DayTelemetry into one JSON record
+  per scenario x seed x day (cluster axes reduced host-side), the schema
+  consumed by ``report.telemetry_rows`` and the CI trace artifact.
+
+* **Stage cost attribution** (`profile_stages`, `format_stage_table`):
+  host-side profiler that compiles each stage standalone, reads static
+  compiled cost from the HLO text (``launch.hlo_analysis.analyze_hlo``)
+  and attributes wall-clock (best-of-reps, ``block_until_ready``) per
+  stage against the full jitted day step.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stages
+from repro.core.admission import hour_sum
+
+f32 = jnp.float32
+
+
+# -------------------------------------------------------- metric primitives
+
+def mape(pred, actual, eps: float = 1e-6):
+    """Mean absolute percentage error |pred - actual| / |actual| over the
+    trailing axis (ordered ``hour_sum`` mean — batch-invariant); 1-D
+    inputs return the per-element APE. Always >= 0."""
+    e = jnp.abs(pred - actual) / jnp.clip(jnp.abs(actual), eps, None)
+    if e.ndim > 1:
+        return hour_sum(e) / e.shape[-1]
+    return e
+
+
+def bias(pred, actual, eps: float = 1e-6):
+    """Signed relative error (pred - actual) / |actual|, trailing-axis
+    mean for >=2-D inputs. A zero-error forecast gives exactly 0.0."""
+    e = (pred - actual) / jnp.clip(jnp.abs(actual), eps, None)
+    if e.ndim > 1:
+        return hour_sum(e) / e.shape[-1]
+    return e
+
+
+def coverage(bound, actual):
+    """Empirical coverage: fraction of trailing-axis entries with
+    ``actual <= bound`` (in [0, 1] by construction); 1-D inputs return
+    the 0/1 indicator."""
+    ok = (actual <= bound).astype(f32)
+    if ok.ndim > 1:
+        return hour_sum(ok) / ok.shape[-1]
+    return ok
+
+
+def level_drift(fc_level, trailing, eps: float = 1e-6):
+    """|forecast daily level - trailing-window mean| / mean: the gauge
+    that catches a streaming predictor drifting away from what a rescan
+    over the same window would forecast. fc_level (n,); trailing (n, W)."""
+    m = hour_sum(trailing) / trailing.shape[-1]
+    return jnp.abs(fc_level - m) / jnp.clip(jnp.abs(m), eps, None)
+
+
+# ------------------------------------------------------- the in-graph record
+
+class DayTelemetry(NamedTuple):
+    """One day's diagnostics, per rollout. n = clusters, m = campuses,
+    T = solver outer rounds. The cluster/campus axes are NOT reduced
+    in-graph (host-side consumers reduce them — same convention as the
+    Ledger), so stacking under scan/vmap yields (days, ...) and
+    (batch, days, ...) leaves."""
+    # --- solver convergence (core.vcc / core.spatial channels)
+    obj_cluster_traj: jnp.ndarray     # (T, n) nominal cost per outer round
+    step_max_traj: jnp.ndarray        # (T, n) max |delta step| per round
+    conservation_resid: jnp.ndarray   # (n,)  |sum_h delta| at the solution
+    proj_nu_tol: jnp.ndarray          # (n,)  certified bisection tolerance
+    dual_resid: jnp.ndarray           # (m,)  relative campus overshoot
+    cvar_tail_mass: jnp.ndarray       # (n,)  max CVaR member weight
+    joint_winner: jnp.ndarray         # ()    1.0 = joint refinement kept
+    # --- forecast calibration (vs the realized day)
+    uif_mape: jnp.ndarray             # (n,) hourly U_IF forecast MAPE
+    uif_bias: jnp.ndarray             # (n,) hourly U_IF signed rel. error
+    tuf_mape: jnp.ndarray             # (n,) daily flexible-total MAPE
+    tuf_bias: jnp.ndarray             # (n,)
+    tr_mape: jnp.ndarray              # (n,) daily reservation-total MAPE
+    tr_bias: jnp.ndarray              # (n,)
+    theta_covered: jnp.ndarray        # (n,) 1.0 if realized T_R <= Theta
+    uifq_coverage: jnp.ndarray        # (n,) frac hours U_IF <= (1-g) quant
+    fc_level_drift: jnp.ndarray       # (n,) forecast-vs-trailing-week drift
+    # --- SLO / headroom gauges
+    vcc_binding_frac: jnp.ndarray     # (n,) frac hours reservations at VCC
+    queue_age_days: jnp.ndarray       # (n,) backlog / daily service rate
+    paused: jnp.ndarray               # (n,) 1.0 = SLO pause active
+    shaped: jnp.ndarray               # (n,) 1.0 = cluster actively shaped
+
+
+def day_telemetry(sdiag: Dict[str, jnp.ndarray], fc, res, u_if, vcc_curve,
+                  *, pause_left, shaped, trail) -> DayTelemetry:
+    """Assemble the day's DayTelemetry inside the jitted step.
+
+    ``sdiag``: the optimize_stage solver-diagnostics dict; ``fc``: the
+    forecast dict the day optimized against; ``res``: the shaped
+    admission DayResult; ``u_if``: realized inflexible load (n, 24);
+    ``trail``: dict of trailing-week daily levels {uif, tuf, tr} (n, 7)
+    — the pred rings in streaming mode, the hist window tails in rescan
+    mode. Barrier-pinned: telemetry must never change how the channels
+    it taps re-fuse."""
+    daily_res = hour_sum(res.reservations)
+    drift = jnp.maximum(
+        jnp.maximum(level_drift(hour_sum(fc["uif"]), trail["uif"]),
+                    level_drift(fc["tuf"], trail["tuf"])),
+        level_drift(fc["tr"], trail["tr"]))
+    rec = DayTelemetry(
+        obj_cluster_traj=sdiag["obj_cluster_traj"],
+        step_max_traj=sdiag["step_max_traj"],
+        conservation_resid=sdiag["conservation_resid"],
+        proj_nu_tol=sdiag["proj_nu_tol"],
+        dual_resid=sdiag["dual_resid"],
+        cvar_tail_mass=sdiag["cvar_tail_mass"],
+        joint_winner=sdiag["joint_winner"],
+        uif_mape=mape(fc["uif"], u_if),
+        uif_bias=bias(fc["uif"], u_if),
+        tuf_mape=mape(fc["tuf"], res.served),
+        tuf_bias=bias(fc["tuf"], res.served),
+        tr_mape=mape(fc["tr"], daily_res),
+        tr_bias=bias(fc["tr"], daily_res),
+        theta_covered=(daily_res <= fc["theta"]).astype(f32),
+        uifq_coverage=coverage(fc["uif_q"], u_if),
+        fc_level_drift=drift,
+        # an hour is "binding" when reservations reach the VCC (within
+        # 0.1% — admission saturates at the curve, never above it)
+        vcc_binding_frac=coverage(res.reservations, 0.999 * vcc_curve),
+        queue_age_days=res.queue_end / jnp.clip(res.served, 1e-6, None),
+        paused=(pause_left > 0).astype(f32),
+        shaped=shaped.astype(f32))
+    return jax.lax.optimization_barrier(rec)
+
+
+# ---------------------------------------------------------- trace exporting
+
+# one JSON record per scenario x seed x day; cluster/campus axes reduced
+# host-side (fleet mean for calibration rates, max for residuals/ages)
+TRACE_FIELDS = (
+    "scenario", "seed", "day",
+    "obj_first", "obj_final", "obj_decrease_pct", "step_final",
+    "conservation_max", "proj_tol_max", "dual_max", "cvar_tail_max",
+    "joint_winner",
+    "uif_mape", "uif_bias", "tuf_mape", "tuf_bias", "tr_mape", "tr_bias",
+    "theta_coverage", "uifq_coverage", "fc_level_drift",
+    "vcc_binding_frac", "queue_age_max", "paused_frac", "shaped_frac",
+)
+
+
+def telemetry_records(tel: DayTelemetry, scenario_names: Sequence[str],
+                      n_seeds: int) -> List[Dict[str, object]]:
+    """Flatten a batched rollout's stacked telemetry — leaves shaped
+    (scenario x seed, days, ...), scenario-major seed-minor (the
+    ``scenarios.build_batch`` layout) — into TRACE_FIELDS records."""
+    t = jax.tree.map(lambda a: np.asarray(a, dtype=np.float64), tel)
+    batch, days = t.uif_mape.shape[:2]
+    if batch != len(scenario_names) * n_seeds:
+        raise ValueError(
+            f"telemetry batch of {batch} rollouts != {len(scenario_names)} "
+            f"scenarios x {n_seeds} seeds")
+    records = []
+    for b in range(batch):
+        scen = scenario_names[b // n_seeds]
+        seed = b % n_seeds
+        for d in range(days):
+            obj_first = float(t.obj_cluster_traj[b, d, 0].sum())
+            obj_final = float(t.obj_cluster_traj[b, d, -1].sum())
+            records.append({
+                "scenario": scen, "seed": seed, "day": d,
+                "obj_first": obj_first, "obj_final": obj_final,
+                "obj_decrease_pct": 100.0 * (obj_first - obj_final)
+                / max(abs(obj_first), 1e-9),
+                "step_final": float(t.step_max_traj[b, d, -1].max()),
+                "conservation_max": float(t.conservation_resid[b, d].max()),
+                "proj_tol_max": float(t.proj_nu_tol[b, d].max()),
+                "dual_max": float(t.dual_resid[b, d].max()),
+                "cvar_tail_max": float(t.cvar_tail_mass[b, d].max()),
+                "joint_winner": float(t.joint_winner[b, d]),
+                "uif_mape": float(t.uif_mape[b, d].mean()),
+                "uif_bias": float(t.uif_bias[b, d].mean()),
+                "tuf_mape": float(t.tuf_mape[b, d].mean()),
+                "tuf_bias": float(t.tuf_bias[b, d].mean()),
+                "tr_mape": float(t.tr_mape[b, d].mean()),
+                "tr_bias": float(t.tr_bias[b, d].mean()),
+                "theta_coverage": float(t.theta_covered[b, d].mean()),
+                "uifq_coverage": float(t.uifq_coverage[b, d].mean()),
+                "fc_level_drift": float(t.fc_level_drift[b, d].max()),
+                "vcc_binding_frac": float(t.vcc_binding_frac[b, d].mean()),
+                "queue_age_max": float(t.queue_age_days[b, d].max()),
+                "paused_frac": float(t.paused[b, d].mean()),
+                "shaped_frac": float(t.shaped[b, d].mean()),
+            })
+    return records
+
+
+def write_jsonl(path, records: Sequence[Dict[str, object]]) -> None:
+    """One JSON object per line (the CI trace-artifact format)."""
+    with open(path, "w") as f:
+        for rec in records:
+            f.write(json.dumps(rec, sort_keys=True) + "\n")
+
+
+def read_jsonl(path) -> List[Dict[str, object]]:
+    with open(path) as f:
+        return [json.loads(line) for line in f if line.strip()]
+
+
+# --------------------------------------------------- stage cost attribution
+
+def _time_compiled(fn, args, reps: int):
+    """(compiled HLO text, best-of-reps wall seconds) of jit(fn)(*args)."""
+    f = jax.jit(fn)
+    text = f.lower(*args).compile().as_text()
+    out = f(*args)                      # warm-up (compile + first run)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(*args))
+        best = min(best, time.perf_counter() - t0)
+    return text, best
+
+
+def profile_stages(cfg: stages.StageConfig, params, state,
+                   reps: int = 3) -> List[Dict[str, object]]:
+    """Attribute compiled cost per stage of the day cycle.
+
+    Compiles each stage standalone at the shapes of ``(params, state)``
+    (a burned-in SimState), reads static dot FLOPs/bytes from the
+    compiled HLO (``launch.hlo_analysis.analyze_hlo`` — while-loop trip
+    counts multiplied through, so the PGD scan is costed per-iteration),
+    and times best-of-``reps`` wall clock with ``block_until_ready``.
+    Returns rows {stage, wall_ms, pct, dot_flops, dot_bytes}; ``pct`` is
+    the share of summed per-stage wall time, plus a final ``day_step``
+    row timing the full fused step (its wall_ms < the stage sum is the
+    fusion win; pct is relative to the same stage sum)."""
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    n = state.queue.shape[0]
+    m = state.campus_limit.shape[0]
+    z = state.carbon_hist.shape[0]
+    xs = stages.ones_xs(n, m, z)
+    day_key = jax.random.fold_in(params.key, state.day)
+    pdt = stages.pd_truth(params)
+    cap = params.truth["capacity"]
+    hist_usage = state.pred.usage_ring if cfg.streaming else state.hist_usage
+
+    def power_fn(hist, key):
+        return stages.power_stage(hist, params.lam, cap, pdt, key)
+
+    if cfg.streaming:
+        def forecast_fn(day, gamma):
+            return stages.forecast_stage_streaming(state.pred, day, gamma)
+        forecast_args = (state.day, params.gamma)
+    else:
+        forecast_fn = stages.forecast_stage
+        forecast_args = (state.hist_uif, state.hist_flex_daily,
+                         state.hist_res_daily, state.hist_usage,
+                         state.hist_res, state.hist_tr_pred,
+                         state.hist_uif_pred, state.day, params.gamma)
+
+    def carbon_fn(hist, key):
+        return stages.carbon_stage(params.zone, hist, key,
+                                   xs["green_scale"], xs["coal_scale"])
+
+    # eager prerequisites for the downstream stages
+    model = power_fn(hist_usage, jax.random.fold_in(day_key, 1))
+    fc = forecast_fn(*forecast_args)
+    act_z, fc_z = carbon_fn(state.carbon_hist,
+                            jax.random.fold_in(day_key, 4))
+    eta_act, eta_fc = act_z[state.zmap], fc_z[state.zmap]
+    ens = None
+    if cfg.n_members > 1:
+        from repro.core import risk
+        ens = risk.day_ensembles(
+            jax.random.fold_in(day_key, 5), cfg.n_members, fc["uif"],
+            state.hist_uif_pred, state.hist_uif, fc_z, state.carbon_hist,
+            state.zmap, params.risk_beta)
+
+    def optimize_fn(fcv, eta, queue, u_pow_cap, cap_day, campus_limit):
+        return stages.optimize_stage(
+            cfg, fcv, eta, model, queue, u_pow_cap, cap_day, state.campus,
+            campus_limit, params.lambda_e, params.lambda_p,
+            params.mobility, ens=ens)
+
+    _, sol, _ = optimize_fn(fc, eta_fc, state.queue, state.u_pow_cap, cap,
+                            state.campus_limit)
+    gate = state.shaping_allowed & sol.shaped
+    vcc_curve = jnp.where(gate[:, None], sol.vcc, cap[:, None] * 10.0)
+
+    def observe_fn(curve, cap_day, queue, cf_queue, eta):
+        return stages.observe_stage(
+            params.truth, state.day, day_key, curve, cap_day,
+            xs["arrival_scale"], queue, cf_queue,
+            lambda u: stages.model_power(model, u), eta)
+
+    entries = [
+        ("power_fit", power_fn,
+         (hist_usage, jax.random.fold_in(day_key, 1))),
+        ("forecast", forecast_fn, forecast_args),
+        ("carbon", carbon_fn,
+         (state.carbon_hist, jax.random.fold_in(day_key, 4))),
+        ("optimize", optimize_fn,
+         (fc, eta_fc, state.queue, state.u_pow_cap, cap,
+          state.campus_limit)),
+        ("observe", observe_fn,
+         (vcc_curve, cap, state.queue, state.cf_queue, eta_act)),
+    ]
+    rows: List[Dict[str, object]] = []
+    for name, fn, args in entries:
+        text, secs = _time_compiled(fn, args, reps)
+        summ = analyze_hlo(text)
+        rows.append({"stage": name, "wall_ms": secs * 1e3,
+                     "dot_flops": summ.dot_flops,
+                     "dot_bytes": summ.dot_bytes})
+    stage_total = sum(r["wall_ms"] for r in rows)
+    step = stages.jitted_day_step(cfg)
+    text = step.lower(params, state, xs).compile().as_text()
+    jax.block_until_ready(step(params, state, xs))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(step(params, state, xs))
+        best = min(best, time.perf_counter() - t0)
+    summ = analyze_hlo(text)
+    rows.append({"stage": "day_step", "wall_ms": best * 1e3,
+                 "dot_flops": summ.dot_flops, "dot_bytes": summ.dot_bytes})
+    for r in rows:
+        r["pct"] = 100.0 * r["wall_ms"] / max(stage_total, 1e-9)
+    return rows
+
+
+def format_stage_table(rows: List[Dict[str, object]]) -> str:
+    """Fixed-width stage-cost table (the CI PR-comment rendering)."""
+    name_w = max([len("stage")] + [len(r["stage"]) for r in rows]) + 2
+    out = ["stage".ljust(name_w) + "   wall_ms      pct     dot_GFLOP"
+           + "    dot_MB"]
+    out.append("-" * (name_w + 44))
+    for r in rows:
+        out.append(r["stage"].ljust(name_w)
+                   + f"{r['wall_ms']:9.2f}  {r['pct']:6.1f}%  "
+                   + f"{r['dot_flops'] / 1e9:12.3f}  "
+                   + f"{r['dot_bytes'] / 1e6:8.2f}")
+    return "\n".join(out)
+
+
+__all__ = [
+    "DayTelemetry", "day_telemetry", "mape", "bias", "coverage",
+    "level_drift", "telemetry_records", "write_jsonl", "read_jsonl",
+    "profile_stages", "format_stage_table", "TRACE_FIELDS",
+]
