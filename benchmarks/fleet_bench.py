@@ -148,7 +148,8 @@ def fig12_controlled_experiment(n_clusters=16, days=12, seed=5):
                                             collect=True)
         new_slo, allowed = slo.update(st.slo_state, cfg.slo,
                                       res.reservations.sum(1),
-                                      vcc_curve.sum(1), res.unmet)
+                                      vcc_curve.sum(1), res.unmet,
+                                      res.arrived)
         st.slo_state, st.shaping_allowed = new_slo, allowed
         p = np.asarray(res.power)
         e = np.asarray(intensity)

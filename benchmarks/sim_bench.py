@@ -54,14 +54,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fleet as F
+from repro.core import admission, fleet as F
 from repro.core import risk, solver, spatial, stats, vcc
 from repro.core import stages as stages_mod
 from repro.core.stages import hour_sum
 from repro.sim import (SimConfig, Scenario, build_batch, build_params,
-                       default_library, make_day_step, make_init,
-                       make_rollout, mobility_sweep_library,
-                       mobility_sweep_rows, risk_sweep_library,
+                       default_library, forecast_bust_library,
+                       make_day_step, make_init, make_rollout,
+                       mobility_sweep_library, mobility_sweep_rows,
+                       mpc_recourse_rows, risk_sweep_library,
                        risk_sweep_rows, rollout_batch,
                        rollout_batch_sharded, scenario_rows, state_nbytes,
                        telemetry_records, write_jsonl)
@@ -426,6 +427,120 @@ def _telemetry_probe(n_clusters=6, days=4, n_scen=2, n_seeds=2,
     }, records
 
 
+def _legacy_run_day(vcc, u_if, arrivals, ratio, capacity, queue0, power_fn,
+                    intensity, allowance_frac: float = 0.25):
+    """Verbatim pre-MPC ``admission.run_day`` (inline tick + hard-coded
+    0.25 late-day allowance; ``allowance_frac`` accepted for call
+    compatibility, unused — the default-config trace passes 0.25). The
+    collapse probe traces the day step against THIS to certify that
+    ``mpc=False`` still compiles to the byte-identical open-loop HLO."""
+    def tick(queue, inp):
+        vcc_h, uif_h, arr_h, r_h = inp
+        flex_room_res = jnp.clip(vcc_h - uif_h * r_h, 0.0, None)
+        flex_room = flex_room_res / jnp.clip(r_h, 1.0, None)
+        flex_room = jnp.minimum(flex_room,
+                                jnp.clip(capacity - uif_h, 0.0, None))
+        demand = queue + arr_h
+        use_flex = jnp.minimum(demand, flex_room)
+        queue = demand - use_flex
+        return queue, (use_flex, queue)
+
+    xs = (vcc.T, u_if.T, arrivals.T, ratio.T)
+    queue_end, (use_flex, queue_traj) = jax.lax.scan(tick, queue0, xs)
+    use_flex = use_flex.T                       # (n, 24)
+    usage_total = u_if + use_flex
+    reservations = usage_total * ratio
+    power = jax.vmap(power_fn, in_axes=1, out_axes=1)(usage_total)
+    carbon = power * intensity
+    arrived = hour_sum(arrivals)
+    served = hour_sum(use_flex)
+    allowance = 0.25 * arrived
+    unmet = jnp.clip(queue_end - queue0 - allowance, 0.0, None)
+    return admission.DayResult(
+        usage_flex=use_flex, usage_total=usage_total,
+        reservations=reservations, power=power, carbon=carbon,
+        served=served, arrived=arrived, queue_end=queue_end, unmet=unmet)
+
+
+def _mpc_probe(n_clusters=6, days=4, n_seeds=2, hist_days=14, reps=3,
+               solve_clusters=256):
+    """Intra-day MPC recourse probe: three CI-gated measures.
+
+    1. Hourly re-solve cost: the warm-started suffix solve
+       (``vcc.solve_vcc_suffix``, 2x8 PGD steps over the remaining hours)
+       vs the full day-ahead solve (20x80) on the same synthetic fleet —
+       gate: ratio < 1/24, so 24 hourly re-solves stay cheaper than one
+       extra day solve.
+    2. Closed-vs-open loop outcomes: the forecast-busting library
+       (randomly placed intra-day carbon/arrival blocks the planner never
+       saw) rolled out twice over the SAME batch, mpc=True vs mpc=False —
+       gate: every row improves carbon OR within-24h flex service.
+    3. Collapse contract: the mpc=False day-step HLO byte-compared
+       against the graph traced with the verbatim pre-MPC
+       ``admission.run_day`` — gate: identical (same contract as the
+       telemetry flag)."""
+    # --- 1. suffix re-solve vs full solve wall time
+    p = vcc.synthetic_problem(solve_clusters, seed=11, n_campuses=4)
+    f_full = jax.jit(lambda q: vcc.solve_vcc(q, use_pallas=False).delta)
+    sol0 = vcc.solve_vcc(p, use_pallas=False)
+    f_sfx = jax.jit(lambda q, d0, m0: vcc.solve_vcc_suffix(
+        q, d0, m0, 8, use_pallas=False).delta)
+
+    def timed(f, *args):
+        jax.block_until_ready(f(*args))          # compile + warm
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(*args))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_full = timed(f_full, p)
+    t_sfx = timed(f_sfx, p, sol0.delta, sol0.mu)
+
+    # --- 2. closed vs open loop on the forecast-busting scenarios
+    base = dict(n_clusters=n_clusters, n_campuses=2, n_zones=2,
+                pds_per_cluster=2, hist_days=hist_days)
+    cfg_open = SimConfig(**base)
+    cfg_mpc = SimConfig(**base, mpc=True)
+    scens = forecast_bust_library(days)
+    seeds = list(range(n_seeds))
+    batch = build_batch(cfg_open, scens, seeds, days)
+    _, led_open, _ = rollout_batch(cfg_open, days)(batch)
+    _, led_mpc, _ = rollout_batch(cfg_mpc, days)(batch)
+    jax.block_until_ready((led_open, led_mpc))
+    rows = mpc_recourse_rows(led_mpc, led_open, [s.name for s in scens],
+                             n_seeds)
+
+    # --- 3. collapse contract: mpc=False HLO == pre-MPC open-loop graph
+    p1 = build_params(cfg_open, default_library(days)[0], 0, days)
+    s1 = jax.jit(make_init(cfg_open))(p1)
+    xs = _day_xs(p1, 0)
+    scfg = cfg_open.stage_config()
+    hlo_off = stages_mod.jitted_day_step(scfg).lower(p1, s1, xs).as_text()
+    orig = admission.run_day
+    admission.run_day = _legacy_run_day
+    stages_mod.jitted_day_step.cache_clear()
+    try:
+        hlo_legacy = stages_mod.jitted_day_step(scfg).lower(
+            p1, s1, xs).as_text()
+    finally:
+        admission.run_day = orig
+        stages_mod.jitted_day_step.cache_clear()
+
+    return {
+        "mpc_full_solve_ms": 1e3 * t_full,
+        "mpc_suffix_solve_ms": 1e3 * t_sfx,
+        "mpc_resolve_cost_ratio": t_sfx / t_full,
+        "mpc_rows": rows,
+        "mpc_carbon_delta_pct": float(np.mean(
+            [r["carbon_vs_open_pct"] for r in rows])),
+        "mpc_flex24h_delta_pp": float(np.mean(
+            [r["flex24h_vs_open_pp"] for r in rows])),
+        "mpc_hlo_identical": bool(hlo_off == hlo_legacy),
+    }
+
+
 def run(quick: bool = False, out_path: Path = None):
     # quick mode must never clobber the committed full-run baseline it is
     # gated against; default its output to a sibling file
@@ -447,9 +562,11 @@ def run(quick: bool = False, out_path: Path = None):
         hor_kw = dict(days=4, reps=2)
         stream_kw = dict()
         tel_kw = dict(n_clusters=4, days=3, reps=2)
+        mpc_kw = dict(n_clusters=4, days=4, n_seeds=2, reps=2)
     else:
         legacy_kw, batch_kw, ens_kw, risk_kw = {}, {}, {}, {}
         joint_kw, mob_kw, hor_kw, stream_kw, tel_kw = {}, {}, {}, {}, {}
+        mpc_kw = {}
     base_dps, base_wall = _legacy_days_per_sec(**legacy_kw)
     (bat_dps, bat_wall, compile_wall, fleet_days,
      rows) = _batched_days_per_sec(**batch_kw)
@@ -463,6 +580,7 @@ def run(quick: bool = False, out_path: Path = None):
     hor_rows = _horizon_scaling(**hor_kw)
     stream_drift = _streaming_drift(**stream_kw)
     tel, trace_records = _telemetry_probe(**tel_kw)
+    mpc = _mpc_probe(**mpc_kw)
     by_mode_h = {(r["mode"], r["horizon_days"]): r for r in hor_rows}
     h_lo, h_hi = min(r["horizon_days"] for r in hor_rows), \
         max(r["horizon_days"] for r in hor_rows)
@@ -496,6 +614,7 @@ def run(quick: bool = False, out_path: Path = None):
         **ens,
         **joint,
         **tel,
+        **mpc,
     }
     dest = out_path or BENCH_PATH
     dest.write_text(json.dumps(rec, indent=1))
@@ -543,6 +662,17 @@ def run(quick: bool = False, out_path: Path = None):
          1.0 if tel["telemetry_hlo_identical"] else 0.0,
          "telemetry-off day-step HLO vs the pre-telemetry graph; "
          "1.0 = byte-identical (collapse contract)"),
+        ("sim_mpc_resolve_cost_ratio", mpc["mpc_resolve_cost_ratio"],
+         f"hourly suffix re-solve vs full day solve "
+         f"({mpc['mpc_suffix_solve_ms']:.2f}ms vs "
+         f"{mpc['mpc_full_solve_ms']:.2f}ms); target < 1/24"),
+        ("sim_mpc_carbon_delta_pct", mpc["mpc_carbon_delta_pct"],
+         "mean closed-vs-open-loop carbon saved across forecast-busting "
+         f"rows (flex24h delta {mpc['mpc_flex24h_delta_pp']:+.2f}pp)"),
+        ("sim_mpc_hlo_identical",
+         1.0 if mpc["mpc_hlo_identical"] else 0.0,
+         "mpc-off day-step HLO vs the pre-MPC open-loop graph; "
+         "1.0 = byte-identical (collapse contract)"),
     ]
     for r in tel["stage_costs"]:
         out.append((f"sim_stagecost_{r['stage']}_ms", r["wall_ms"],
@@ -570,6 +700,14 @@ def run(quick: bool = False, out_path: Path = None):
                     f"carbonSaved={r['carbon_saved_pct']:.2f}% "
                     f"flex24h={r['flex_within_24h_pct']:.2f}% "
                     "(rollout-level joint-vs-sequential carbon delta)"))
+    for r in mpc["mpc_rows"]:
+        # gate helper in main(): closed loop must improve carbon OR
+        # within-24h flex on every forecast-busting row — encode "best of
+        # the two deltas" as the gated scalar
+        out.append((f"sim_{r['scenario']}_mpc_vs_open_best",
+                    max(r["carbon_vs_open_pct"], r["flex24h_vs_open_pp"]),
+                    f"carbon {r['carbon_vs_open_pct']:+.2f}% / flex24h "
+                    f"{r['flex24h_vs_open_pp']:+.2f}pp vs open loop"))
     return out
 
 
@@ -631,6 +769,19 @@ def main():
               "to the pre-telemetry legacy graph (collapse contract)")
         _gate(failures, by_name["sim_telemetry_overhead_pct"], "<", 15.0,
               "telemetry-on rollout overhead (%) over telemetry-off")
+        _gate(failures, by_name["sim_mpc_resolve_cost_ratio"], "<",
+              1.0 / 24.0,
+              "hourly suffix re-solve cost over the full day solve: 24 "
+              "re-solves would exceed one extra day-ahead solve")
+        _gate(failures, by_name["sim_mpc_hlo_identical"], ">=", 1.0,
+              "mpc-off day-step HLO is no longer byte-identical to the "
+              "pre-MPC open-loop graph (collapse contract)")
+        for name, val, _ in rows:
+            if name.endswith("_mpc_vs_open_best"):
+                _gate(failures, val, ">=", 0.0,
+                      f"{name}: the closed loop improved NEITHER carbon "
+                      "nor within-24h flex service on a forecast-busting "
+                      "row")
         for name, val, _ in rows:
             # Rollout-level tripwire, NOT a structural property: the
             # best-of safeguard guarantees plan-level dominance (gated

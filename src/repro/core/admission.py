@@ -52,8 +52,53 @@ jax.tree_util.register_dataclass(
     meta_fields=[])
 
 
+def admission_tick(queue, vcc_h, uif_h, arr_h, r_h, capacity):
+    """One hourly admission decision for all clusters: (queue', use_flex).
+
+    Shared by ``run_day``'s 24-tick scan and the MPC recourse loop
+    (``core.mpc``), so the intra-day controller can never fork from the
+    open-loop admission semantics."""
+    # inflexible is always admitted (possibly beyond VCC — by design
+    # shaping must never impact it); flexible gets the remainder.
+    flex_room_res = jnp.clip(vcc_h - uif_h * r_h, 0.0, None)
+    flex_room = flex_room_res / jnp.clip(r_h, 1.0, None)
+    # machine capacity is a hard cap on usage
+    flex_room = jnp.minimum(flex_room,
+                            jnp.clip(capacity - uif_h, 0.0, None))
+    demand = queue + arr_h
+    use_flex = jnp.minimum(demand, flex_room)
+    queue = demand - use_flex
+    return queue, use_flex
+
+
+def finalize_day(use_flex, queue_end, u_if, arrivals, ratio, queue0,
+                 power_fn, intensity, allowance_frac: float = 0.25
+                 ) -> DayResult:
+    """Assemble the DayResult from realized hourly flexible usage — the
+    single definition of the day's power/carbon/SLO accounting, used by
+    both the open-loop ``run_day`` and the hourly MPC loop.
+
+    ``allowance_frac``: SLO semantics (paper): flexible work completes
+    within 24h. Work that arrived late today may legitimately run
+    tomorrow morning; count as unmet only the backlog growth beyond a
+    late-day allowance of ``allowance_frac * arrived`` (the report layer
+    surfaces the value the gate was computed against)."""
+    usage_total = u_if + use_flex
+    reservations = usage_total * ratio
+    power = jax.vmap(power_fn, in_axes=1, out_axes=1)(usage_total)
+    carbon = power * intensity
+    arrived = hour_sum(arrivals)
+    served = hour_sum(use_flex)
+    allowance = allowance_frac * arrived
+    unmet = jnp.clip(queue_end - queue0 - allowance, 0.0, None)
+    return DayResult(usage_flex=use_flex, usage_total=usage_total,
+                     reservations=reservations, power=power, carbon=carbon,
+                     served=served, arrived=arrived, queue_end=queue_end,
+                     unmet=unmet)
+
+
 def run_day(vcc, u_if, arrivals, ratio, capacity, queue0, power_fn,
-            intensity) -> DayResult:
+            intensity, allowance_frac: float = 0.25) -> DayResult:
     """Simulate one day for all clusters.
 
     vcc, u_if, arrivals, ratio: (n, 24); capacity: (n,); queue0: (n,)
@@ -61,33 +106,11 @@ def run_day(vcc, u_if, arrivals, ratio, capacity, queue0, power_fn,
     """
     def tick(queue, inp):
         vcc_h, uif_h, arr_h, r_h = inp
-        # inflexible is always admitted (possibly beyond VCC — by design
-        # shaping must never impact it); flexible gets the remainder.
-        flex_room_res = jnp.clip(vcc_h - uif_h * r_h, 0.0, None)
-        flex_room = flex_room_res / jnp.clip(r_h, 1.0, None)
-        # machine capacity is a hard cap on usage
-        flex_room = jnp.minimum(flex_room,
-                                jnp.clip(capacity - uif_h, 0.0, None))
-        demand = queue + arr_h
-        use_flex = jnp.minimum(demand, flex_room)
-        queue = demand - use_flex
+        queue, use_flex = admission_tick(queue, vcc_h, uif_h, arr_h, r_h,
+                                         capacity)
         return queue, (use_flex, queue)
 
     xs = (vcc.T, u_if.T, arrivals.T, ratio.T)
     queue_end, (use_flex, queue_traj) = jax.lax.scan(tick, queue0, xs)
-    use_flex = use_flex.T                       # (n, 24)
-    usage_total = u_if + use_flex
-    reservations = usage_total * ratio
-    power = jax.vmap(power_fn, in_axes=1, out_axes=1)(usage_total)
-    carbon = power * intensity
-    arrived = hour_sum(arrivals)
-    served = hour_sum(use_flex)
-    # SLO semantics (paper): flexible work completes within 24h. Work that
-    # arrived late today may legitimately run tomorrow morning; count as
-    # unmet only the backlog growth beyond a late-day allowance.
-    allowance = 0.25 * arrived
-    unmet = jnp.clip(queue_end - queue0 - allowance, 0.0, None)
-    return DayResult(usage_flex=use_flex, usage_total=usage_total,
-                     reservations=reservations, power=power, carbon=carbon,
-                     served=served, arrived=arrived, queue_end=queue_end,
-                     unmet=unmet)
+    return finalize_day(use_flex.T, queue_end, u_if, arrivals, ratio,
+                        queue0, power_fn, intensity, allowance_frac)

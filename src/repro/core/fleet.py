@@ -64,6 +64,9 @@ class FleetConfig:
     #                               sim.telemetry DayTelemetry under
     #                               record["telemetry"]; False keeps the
     #                               legacy compiled graph byte-identical
+    mpc: bool = False             # True = intra-day MPC recourse
+    #                               (core.mpc hourly suffix re-solves);
+    #                               False = the open-loop legacy graph
     slo: slo.SLOConfig = field(default_factory=slo.SLOConfig)
 
 
@@ -105,7 +108,8 @@ def _stage_cfg(cfg: FleetConfig) -> stages.StageConfig:
     return stages.StageConfig(slo_margin=cfg.slo.margin,
                               slo_pause_days=cfg.slo.pause_days,
                               streaming=cfg.streaming,
-                              telemetry=cfg.telemetry)
+                              telemetry=cfg.telemetry,
+                              mpc=cfg.mpc)
 
 
 # --------------------------------------------- FleetState <-> stage pytrees

@@ -20,6 +20,10 @@ class SLOConfig:
     margin: float = 1.0           # demand/VCC ratio considered "crowded"
     pause_days: int = 7
     target_violation_rate: float = 0.03    # ~1 day / month
+    # a day counts as violated when unmet flexible work exceeds this
+    # fraction of the day's arrivals (relative, so the detector fires the
+    # same way on a 10-CPU synthetic cluster and a 10k-CPU production one)
+    rel_tol: float = 1e-3
 
 
 def init_state(n_clusters: int):
@@ -32,18 +36,27 @@ def init_state(n_clusters: int):
 
 
 def update(state, cfg: SLOConfig, daily_reservations, vcc_budget,
-           flexible_unmet):
+           flexible_unmet, arrived):
     """One end-of-day update.
     daily_reservations: (n,) realized total reservation demand;
     vcc_budget: (n,) sum_h VCC(h); flexible_unmet: (n,) CPU-h of flexible
-    demand that did not run within the day (true SLO violation signal).
-    Returns (new_state, shaped_allowed (n,) bool for NEXT day)."""
+    demand that did not run within the day (true SLO violation signal);
+    arrived: (n,) CPU-h of flexible arrivals (violation scale reference).
+    Returns (new_state, shaped_allowed (n,) bool for NEXT day).
+
+    While a pause is active the cluster is unshaped (VCC = capacity), so
+    "crowded" days carry no signal about the shaped curve — the streak is
+    frozen until the pause expires. (The old behavior kept accumulating
+    and re-triggered a full pause, so a persistently busy cluster never
+    resumed shaping.)"""
+    paused = state["pause_left"] > 0
     crowded = daily_reservations >= cfg.margin * vcc_budget
-    streak = jnp.where(crowded, state["crowded_streak"] + 1, 0)
-    trigger = streak >= 2
+    streak = jnp.where(paused, state["crowded_streak"],
+                       jnp.where(crowded, state["crowded_streak"] + 1, 0))
+    trigger = (~paused) & (streak >= 2)
     pause = jnp.where(trigger, cfg.pause_days,
                       jnp.maximum(state["pause_left"] - 1, 0))
-    violated = flexible_unmet > 1e-6
+    violated = flexible_unmet > cfg.rel_tol * arrived
     new = {
         "crowded_streak": jnp.where(trigger, 0, streak),
         "pause_left": pause,

@@ -39,8 +39,8 @@ from typing import Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import (admission, carbon, forecast, power, risk, slo,
-                        spatial, stats, vcc)
+from repro.core import (admission, carbon, forecast, mpc, power, risk,
+                        slo, spatial, stats, vcc)
 
 f32 = jnp.float32
 
@@ -154,6 +154,14 @@ class SimParams(NamedTuple):
     cap_scale: jnp.ndarray            # (days, n) capacity multiplier
     arrival_scale: jnp.ndarray        # (days, n) flexible-demand multiplier
     campus_scale: jnp.ndarray         # (days, m) campus power-limit scale
+    # Intraday forecast-busting channels (sim.scenarios Intraday*
+    # perturbations): hourly multipliers applied to the ACTUALS after the
+    # day-ahead forecasts are drawn, so the planner is blind to them
+    # until the hours realize. The None default flattens to an empty
+    # pytree subtree — absent channels leave every compiled graph
+    # byte-identical (same mechanism as StepOut.telemetry).
+    arrival_hour_scale: Optional[jnp.ndarray] = None   # (days, 24)
+    carbon_hour_scale: Optional[jnp.ndarray] = None    # (days, 24)
 
 
 class SimState(NamedTuple):
@@ -197,7 +205,9 @@ class StepOut(NamedTuple):
     res: admission.DayResult          # shaped admission result
     cf: admission.DayResult           # unshaped counterfactual result
     sol: vcc.VCCSolution
-    vcc_curve: jnp.ndarray            # (n, 24) post-SLO-gate VCC
+    vcc_curve: jnp.ndarray            # (n, 24) post-SLO-gate VCC (with
+    #                                   StageConfig.mpc the hour-by-hour
+    #                                   ENFORCED curve, not the 00:00 plan)
     fc: Dict[str, jnp.ndarray]        # forecast dict
     prob: vcc.VCCProblem              # problem actually optimized
     eta_act: jnp.ndarray              # (n, 24) actual intensity per cluster
@@ -237,6 +247,18 @@ class StageConfig:
     #                               step; False keeps the compiled graph
     #                               byte-identical to the legacy day
     #                               (collapse contract, HLO-tested)
+    mpc: bool = False             # True = intra-day MPC recourse: each
+    #                               hour observes the realized load /
+    #                               intensity and warm-starts a short
+    #                               suffix re-solve of the remaining
+    #                               hours' VCC (core.mpc); False keeps
+    #                               the open-loop day-ahead graph
+    #                               byte-identical (collapse contract,
+    #                               HLO-tested like `telemetry`)
+    slo_allowance: float = 0.25   # late-day arrival fraction NOT counted
+    #                               as unmet (admission.finalize_day);
+    #                               the default reproduces the historical
+    #                               hard-coded 0.25
 
 
 def pd_truth(params: SimParams) -> power.PDTruth:
@@ -475,34 +497,72 @@ def barrier_result(res: admission.DayResult) -> admission.DayResult:
     return admission.DayResult(*vals)
 
 
-def observe_stage(truth, day, day_key, vcc_curve, cap_day, arr_scale,
-                  queue, cf_queue, power_fn, intensity):
-    """Sample the day's true load and run shaped + counterfactual
-    admission. Returns (shaped DayResult, counterfactual DayResult,
-    u_if, arrivals), results barrier-pinned."""
+def sample_day_truth(truth, day, day_key, cap_day, arr_scale,
+                     arr_hour_scale=None):
+    """Sample the day's actual load: (u_if, arrivals, ratio_true), pinned.
+
+    ``arr_hour_scale`` (optional (24,)): intraday forecast-busting
+    multiplier on arrivals — applied to the ACTUALS only, after the
+    forecasts were issued. None (the default) traces the exact legacy op
+    sequence (byte-identical compiled graph)."""
     u_if = sample_inflexible(jax.random.fold_in(day_key, 2), truth, day)
     u_if = jnp.minimum(u_if, 0.98 * cap_day[:, None])   # outage derates
     arrivals = sample_arrivals(jax.random.fold_in(day_key, 3), truth, day)
     arrivals = arrivals * arr_scale[:, None]
+    if arr_hour_scale is not None:
+        arrivals = arrivals * arr_hour_scale[None, :]
     ratio_true = true_ratio(truth, u_if + arrivals)
     # pin the sampled truth: its elementwise chain must not re-fuse (and
     # re-round) differently between the scan body and other contexts
-    u_if, arrivals, ratio_true = jax.lax.optimization_barrier(
-        (u_if, arrivals, ratio_true))
+    return jax.lax.optimization_barrier((u_if, arrivals, ratio_true))
+
+
+def observe_stage(truth, day, day_key, vcc_curve, cap_day, arr_scale,
+                  queue, cf_queue, power_fn, intensity,
+                  allowance_frac: float = 0.25, arr_hour_scale=None):
+    """Sample the day's true load and run shaped + counterfactual
+    admission. Returns (shaped DayResult, counterfactual DayResult,
+    u_if, arrivals), results barrier-pinned."""
+    u_if, arrivals, ratio_true = sample_day_truth(
+        truth, day, day_key, cap_day, arr_scale, arr_hour_scale)
     res = admission.run_day(vcc_curve, u_if, arrivals, ratio_true, cap_day,
-                            queue, power_fn, intensity)
+                            queue, power_fn, intensity, allowance_frac)
     unshaped = jnp.broadcast_to(cap_day[:, None] * 10.0, vcc_curve.shape)
     cf = admission.run_day(unshaped, u_if, arrivals, ratio_true, cap_day,
-                           cf_queue, power_fn, intensity)
+                           cf_queue, power_fn, intensity, allowance_frac)
     return barrier_result(res), barrier_result(cf), u_if, arrivals
 
 
+def observe_stage_mpc(truth, day, day_key, prob, sol, fc, gate, cap_day,
+                      arr_scale, queue, cf_queue, power_fn, intensity,
+                      allowance_frac: float = 0.25, arr_hour_scale=None,
+                      use_pallas=None, interpret=False):
+    """Closed-loop counterpart of ``observe_stage``: same sampled truth
+    and same unshaped counterfactual, but the shaped run is the hourly
+    MPC recourse loop (``core.mpc.mpc_day``) instead of open-loop
+    admission under the 00:00 curve. Returns (res, cf, u_if, arrivals,
+    enforced_vcc (n, 24), stats.HourAccum, mpc.MPCDiag)."""
+    u_if, arrivals, ratio_true = sample_day_truth(
+        truth, day, day_key, cap_day, arr_scale, arr_hour_scale)
+    res, vcc_real, acc, diag = mpc.mpc_day(
+        prob, sol, fc["tuf"], gate, cap_day, u_if, arrivals, ratio_true,
+        queue, power_fn, intensity, allowance_frac=allowance_frac,
+        use_pallas=use_pallas, interpret=interpret)
+    unshaped = jnp.broadcast_to(cap_day[:, None] * 10.0, vcc_real.shape)
+    cf = admission.run_day(unshaped, u_if, arrivals, ratio_true, cap_day,
+                           cf_queue, power_fn, intensity, allowance_frac)
+    vcc_real = jax.lax.optimization_barrier(vcc_real)
+    return (barrier_result(res), barrier_result(cf), u_if, arrivals,
+            vcc_real, acc, diag)
+
+
 def slo_stage(slo_state, slo_cfg: slo.SLOConfig, daily_reservations,
-              vcc_budget, unmet):
+              vcc_budget, unmet, arrived):
     """End-of-day SLO feedback: returns (new slo_state, shaping_allowed
-    for the NEXT day)."""
+    for the NEXT day). ``arrived`` scales the violation threshold
+    (slo.SLOConfig.rel_tol)."""
     return slo.update(slo_state, slo_cfg, daily_reservations, vcc_budget,
-                      unmet)
+                      unmet, arrived)
 
 
 # ------------------------------------------------------------- composition
@@ -549,6 +609,11 @@ def make_day_step(cfg: StageConfig):
         act_z, fc_z = carbon_stage(params.zone, state.carbon_hist,
                                    jax.random.fold_in(day_key, 4),
                                    xs["green_scale"], xs["coal_scale"])
+        # intraday forecast-busting: perturb the ACTUAL intensity after
+        # the day-ahead forecast is drawn (the planner is blind until the
+        # hours realize; tomorrow's forecaster sees them via carbon_hist)
+        if "carbon_hour_scale" in xs:
+            act_z = act_z * xs["carbon_hour_scale"][None, :]
         eta_act = act_z[state.zmap]
         eta_fc = fc_z[state.zmap]
         # 3b. forecast ensembles (K > 1 only: the n_members == 1 graph must
@@ -569,11 +634,27 @@ def make_day_step(cfg: StageConfig):
         gate = state.shaping_allowed & sol.shaped
         vcc_curve = jnp.where(gate[:, None], sol.vcc, cap_day[:, None] * 10.0)
         vcc_curve = jax.lax.optimization_barrier(vcc_curve)
-        # 6. real time: admission on ACTUAL load (+ counterfactual)
-        res, cf, u_if, _ = observe_stage(
-            params.truth, state.day, day_key, vcc_curve, cap_day,
-            xs["arrival_scale"], state.queue, state.cf_queue,
-            lambda u: model_power(model, u), eta_act)
+        # 6. real time: admission on ACTUAL load (+ counterfactual).
+        # mpc=True runs the hourly recourse loop and the curve the SLO
+        # detector sees is the hour-by-hour ENFORCED one, not the 00:00
+        # plan; mpc=False traces the exact open-loop legacy graph.
+        arr_hs = xs.get("arrival_hour_scale")
+        mdiag = None
+        acc = None
+        if cfg.mpc:
+            res, cf, u_if, _, vcc_enforced, acc, mdiag = observe_stage_mpc(
+                params.truth, state.day, day_key, prob, sol, fc, gate,
+                cap_day, xs["arrival_scale"], state.queue, state.cf_queue,
+                lambda u: model_power(model, u), eta_act,
+                allowance_frac=cfg.slo_allowance, arr_hour_scale=arr_hs,
+                use_pallas=cfg.use_pallas, interpret=cfg.interpret)
+        else:
+            res, cf, u_if, _ = observe_stage(
+                params.truth, state.day, day_key, vcc_curve, cap_day,
+                xs["arrival_scale"], state.queue, state.cf_queue,
+                lambda u: model_power(model, u), eta_act,
+                allowance_frac=cfg.slo_allowance, arr_hour_scale=arr_hs)
+            vcc_enforced = vcc_curve
         # 7. telemetry + SLO feedback
         slo_state = {"crowded_streak": state.crowded_streak,
                      "pause_left": state.pause_left,
@@ -581,16 +662,23 @@ def make_day_step(cfg: StageConfig):
                      "observed_days": state.observed_days}
         new_slo, allowed = slo_stage(slo_state, slo_cfg,
                                      hour_sum(res.reservations),
-                                     hour_sum(vcc_curve), res.unmet)
+                                     hour_sum(vcc_enforced), res.unmet,
+                                     res.arrived)
         if cfg.streaming:
             # O(1) telemetry: absorb the day into the streaming carry
             # (prediction errors pair same-day with the fc issued above —
             # exactly what the hist_*_pred rolls recorded for later)
-            telemetry = dict(
-                pred=stats.predictor_update(
+            if cfg.mpc:
+                # hour-grain chain: the 24 hour_update scatters finalize
+                # into the same PredictorState the daily batch would
+                pred_new = stats.hour_finalize(state.pred, acc, fc,
+                                               state.day, params.gamma)
+            else:
+                pred_new = stats.predictor_update(
                     state.pred, fc, state.day, params.gamma, u_if,
                     res.served, hour_sum(res.reservations),
-                    res.usage_total, res.reservations))
+                    res.usage_total, res.reservations)
+            telemetry = dict(pred=pred_new)
         else:
             # roll the rescan history windows (predictions included, for
             # the trailing-error quantiles)
@@ -630,11 +718,11 @@ def make_day_step(cfg: StageConfig):
                          "tuf": state.hist_flex_daily[:, -7:],
                          "tr": state.hist_res_daily[:, -7:]}
             telem = _telemetry.day_telemetry(
-                sdiag, fc, res, u_if, vcc_curve,
+                sdiag, fc, res, u_if, vcc_enforced,
                 pause_left=new_slo["pause_left"], shaped=sol.shaped,
-                trail=trail)
+                trail=trail, recourse=mdiag)
         return new_state, StepOut(res=res, cf=cf, sol=sol,
-                                  vcc_curve=vcc_curve, fc=fc, prob=prob,
+                                  vcc_curve=vcc_enforced, fc=fc, prob=prob,
                                   eta_act=eta_act, telemetry=telem)
 
     return step

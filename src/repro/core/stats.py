@@ -424,3 +424,61 @@ def predictor_update(pred: PredictorState, fc: Dict[str, jnp.ndarray],
         theta_err_ring=ring_push(pred.theta_err_ring, tr_err),
         gamma_err_ring=ring_push(pred.gamma_err_ring, gamma_err),
         usage_ring=ring_push(pred.usage_ring, usage_total))
+
+
+# ------------------------------------------------- hour-grain advancement
+
+class HourAccum(NamedTuple):
+    """Partial-day accumulator: the hour-grain extension of the day-grain
+    ``predictor_update`` recursion. The MPC recourse loop (``core.mpc``)
+    pushes one observed hour at a time; ``hour_finalize`` absorbs the
+    completed day into the ``PredictorState`` carry.
+
+    Columns are scattered in hour order and the daily totals accumulate
+    by the SAME ordered adds as ``admission.hour_sum``, so chaining 24
+    ``hour_update`` calls and finalizing is BITWISE identical to the
+    daily batch ``predictor_update`` on the assembled arrays
+    (property-tested in tests/test_mpc_properties.py)."""
+    hour: jnp.ndarray            # () int32 hours absorbed so far
+    u_if: jnp.ndarray            # (n, 24) realized inflexible columns
+    use_flex: jnp.ndarray        # (n, 24) realized flexible columns
+    usage: jnp.ndarray           # (n, 24) u_if + use_flex
+    res: jnp.ndarray             # (n, 24) reservations = usage * ratio
+    flex_daily: jnp.ndarray      # (n,) ordered running sum of use_flex
+    res_daily: jnp.ndarray       # (n,) ordered running sum of res
+
+
+def hour_accum_init(n: int) -> HourAccum:
+    z24 = jnp.zeros((n, 24), f32)
+    return HourAccum(hour=jnp.zeros((), jnp.int32), u_if=z24,
+                     use_flex=z24, usage=z24, res=z24,
+                     flex_daily=jnp.zeros((n,), f32),
+                     res_daily=jnp.zeros((n,), f32))
+
+
+def hour_update(acc: HourAccum, hour, u_if_h, use_flex_h, ratio_h
+                ) -> HourAccum:
+    """Absorb one observed hour — O(1) work per step, O(n * 24) state.
+    ``hour`` may be traced (the MPC sub-scan carries it); ``u_if_h`` /
+    ``use_flex_h`` / ``ratio_h`` are (n,) actuals for that hour."""
+    usage_h = u_if_h + use_flex_h
+    res_h = usage_h * ratio_h
+    return HourAccum(
+        hour=acc.hour + 1,
+        u_if=acc.u_if.at[:, hour].set(u_if_h),
+        use_flex=acc.use_flex.at[:, hour].set(use_flex_h),
+        usage=acc.usage.at[:, hour].set(usage_h),
+        res=acc.res.at[:, hour].set(res_h),
+        # ordered adds in ascending-hour order == admission.hour_sum
+        flex_daily=acc.flex_daily + use_flex_h,
+        res_daily=acc.res_daily + res_h)
+
+
+def hour_finalize(pred: PredictorState, acc: HourAccum,
+                  fc: Dict[str, jnp.ndarray], day, gamma) -> PredictorState:
+    """Close the day: absorb the hour-grain accumulator into the
+    streaming carry. Equals the daily batch ``predictor_update`` on the
+    same realized arrays (the accumulator reconstructs them exactly)."""
+    return predictor_update(pred, fc, day, gamma, acc.u_if,
+                            acc.flex_daily, acc.res_daily, acc.usage,
+                            acc.res)

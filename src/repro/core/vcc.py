@@ -281,6 +281,77 @@ def solve_vcc(p: VCCProblem, *, inner_iters: int = 80, outer_iters: int = 20,
     return sol, diag
 
 
+def suffix_bounds(p: VCCProblem, delta_committed, hour):
+    """Bounds of the masked suffix polytope at intra-day ``hour`` (0-23,
+    may be traced): elapsed hours (h < hour) are pinned at the REALIZED
+    deviations ``delta_committed``, remaining hours keep the day-ahead
+    box. The exact bisection projection onto {sum_h delta = 0} ∩ [lo, ub]
+    then enforces the TIGHTENED suffix conservation
+    ``sum_{h >= hour} delta = -sum_{h < hour} delta_committed`` for free
+    — no new solver math.
+
+    Feasibility needs both box sums to bracket zero (the day-ahead check
+    only needs ``sum ub >= 0`` because its lo is the constant
+    -drop_limit); clusters whose realized prefix cannot be conserved any
+    more are pinned to ``delta_committed`` everywhere — the projection
+    returns a lo==ub row exactly, so infeasible clusters simply keep
+    their current plan. Returns (lo, ub, feasible)."""
+    mask = jnp.arange(24) >= hour                       # True = remaining
+    lo, ub, feasible = delta_bounds(p)
+    lo = jnp.where(mask[None, :], lo, delta_committed)
+    ub = jnp.where(mask[None, :], ub, delta_committed)
+    feasible = feasible & (hour_sum(lo) <= 1e-6) \
+        & (hour_sum(ub) >= -1e-6)
+    lo = jnp.where(feasible[:, None], lo, delta_committed)
+    ub = jnp.where(feasible[:, None], ub, delta_committed)
+    return lo, ub, feasible
+
+
+def solve_vcc_suffix(p: VCCProblem, delta0, mu0, hour, *,
+                     inner_iters: int = 8, outer_iters: int = 2,
+                     lr: float = 0.5, temp_frac: float = 0.02,
+                     rho: float = 0.2, use_pallas: Optional[bool] = None,
+                     interpret: bool = False) -> VCCSolution:
+    """Warm-started intra-day re-solve of the REMAINING hours' VCC.
+
+    ``delta0`` (n, 24): the current plan with elapsed columns (h < hour)
+    replaced by the realized deviations; ``mu0``: campus duals carried
+    from the day-ahead solve (the warm start is what makes the short
+    schedule converge). Machinery is exactly ``solve_vcc``'s —
+    ``solver.pgd_epochs`` inside ``solver.dual_ascent`` with the
+    projection acting on the masked suffix polytope (``suffix_bounds``)
+    — but the default schedule is outer 2 x inner 8 = 16 PGD steps vs
+    the full solve's 20 x 80 = 1600: the < 1/24-of-a-day-solve recourse
+    budget the ROADMAP gate demands (benchmarks/sim_bench.py)."""
+    n, H = p.eta.shape
+    lo, ub, feasible = suffix_bounds(p, delta0, hour)
+    temp = solver.peak_temperature(p.pow_nom, temp_frac)
+    n_dc = p.campus_limit.shape[0]
+    lr_eff = solver.scaled_lr(lr, p.pi, p.tau, p.eta, p.lambda_e,
+                              p.lambda_p)
+
+    def inner(delta, mu):
+        return solver.pgd_epochs(p, delta, mu, lo, ub, lr_eff, temp,
+                                 inner_iters, use_pallas=use_pallas,
+                                 interpret=interpret)
+
+    def dual_update(delta, mu):
+        y = cluster_power(p, delta).max(axis=1)
+        return solver.campus_dual_update(mu, y, p.campus, p.campus_limit,
+                                         rho)
+
+    delta, mu = solver.dual_ascent(inner, dual_update, delta0, mu0,
+                                   outer_iters)
+    pow_h = cluster_power(p, delta)
+    y = pow_h.max(axis=1)
+    vcc_shaped = (p.u_if + (1.0 + delta) * p.tau[:, None] / 24.0) * p.ratio
+    vcc = jnp.where(feasible[:, None],
+                    jnp.minimum(vcc_shaped, p.capacity[:, None]),
+                    p.capacity[:, None])
+    return VCCSolution(delta=delta, y=y, vcc=vcc, shaped=feasible, mu=mu,
+                       objective=objective(p, delta, mu, risk=False))
+
+
 def solve_vcc_batched(p: VCCProblem, **kw) -> VCCSolution:
     """vmap solve_vcc over a leading (scenario x seed) axis of a stacked
     VCCProblem (requires the pytree registration above)."""

@@ -12,13 +12,15 @@ from repro.sim.engine import (SimConfig, SimParams, SimState, make_init,
                               rollout_batch_sharded, rollout_sequential)
 from repro.sim.ledger import Ledger, init_ledger, ledger_update, summarize
 from repro.sim.scenarios import (Scenario, build_params, build_batch,
-                                 default_library, mobility_sweep_library,
+                                 default_library, forecast_bust_library,
+                                 mobility_sweep_library,
                                  risk_sweep_library, MOBILITY_SWEEP,
                                  RISK_BETAS, RISK_MEMBERS)
 from repro.sim.report import (scenario_rows, format_table,
-                              mobility_sweep_rows, risk_sweep_rows,
-                              state_nbytes, telemetry_rows,
-                              MOBILITY_COLUMNS, RISK_COLUMNS,
+                              mobility_sweep_rows, mpc_recourse_rows,
+                              risk_sweep_rows, state_nbytes,
+                              telemetry_rows, MOBILITY_COLUMNS,
+                              MPC_COLUMNS, RISK_COLUMNS,
                               TELEMETRY_COLUMNS)
 from repro.sim.telemetry import (DayTelemetry, day_telemetry,
                                  telemetry_records, write_jsonl, read_jsonl,
@@ -31,11 +33,12 @@ __all__ = [
     "rollout_sequential",
     "Ledger", "init_ledger", "ledger_update", "summarize",
     "Scenario", "build_params", "build_batch", "default_library",
-    "mobility_sweep_library", "risk_sweep_library", "MOBILITY_SWEEP",
-    "RISK_BETAS", "RISK_MEMBERS",
+    "forecast_bust_library", "mobility_sweep_library",
+    "risk_sweep_library", "MOBILITY_SWEEP", "RISK_BETAS", "RISK_MEMBERS",
     "scenario_rows", "format_table", "mobility_sweep_rows",
-    "risk_sweep_rows", "state_nbytes", "telemetry_rows",
-    "MOBILITY_COLUMNS", "RISK_COLUMNS", "TELEMETRY_COLUMNS",
+    "mpc_recourse_rows", "risk_sweep_rows", "state_nbytes",
+    "telemetry_rows", "MOBILITY_COLUMNS", "MPC_COLUMNS", "RISK_COLUMNS",
+    "TELEMETRY_COLUMNS",
     "DayTelemetry", "day_telemetry", "telemetry_records", "write_jsonl",
     "read_jsonl", "profile_stages", "format_stage_table", "TRACE_FIELDS",
 ]

@@ -70,6 +70,13 @@ class SimConfig:
     #                               forecast calibration + SLO gauges);
     #                               False = the legacy graph, byte-
     #                               identical compiled HLO (tested)
+    mpc: bool = False             # True = intra-day MPC recourse (hourly
+    #                               warm-started suffix re-solves,
+    #                               core.mpc); False = open-loop day-ahead
+    #                               plan, byte-identical compiled HLO
+    #                               (tested, same contract as telemetry)
+    slo_allowance: float = 0.25   # late-arrival fraction not counted as
+    #                               unmet (admission.finalize_day)
 
     def stage_config(self) -> stages.StageConfig:
         return stages.StageConfig(slo_margin=self.slo_margin,
@@ -77,7 +84,9 @@ class SimConfig:
                                   joint_spatial=self.joint_spatial,
                                   n_members=self.n_members,
                                   streaming=self.streaming,
-                                  telemetry=self.telemetry)
+                                  telemetry=self.telemetry,
+                                  mpc=self.mpc,
+                                  slo_allowance=self.slo_allowance)
 
 
 def _metrics(res, cf) -> DayMetrics:
@@ -104,12 +113,20 @@ def make_init(cfg: SimConfig):
 
 def _day_xs(params: SimParams, d=None):
     """Scenario-schedule slices. With d=None returns scan xs (leading day
-    axis); with an int d returns that single day's slices."""
+    axis); with an int d returns that single day's slices.
+
+    The intraday forecast-busting channels are included only when the
+    SimParams carry them (non-None): absent keys keep the traced day-step
+    graph — and its compiled HLO — exactly the legacy one."""
     sched = {"green_scale": params.green_scale,
              "coal_scale": params.coal_scale,
              "cap_scale": params.cap_scale,
              "arrival_scale": params.arrival_scale,
              "campus_scale": params.campus_scale}
+    if params.arrival_hour_scale is not None:
+        sched["arrival_hour_scale"] = params.arrival_hour_scale
+    if params.carbon_hour_scale is not None:
+        sched["carbon_hour_scale"] = params.carbon_hour_scale
     if d is None:
         return sched
     return {k: v[d] for k, v in sched.items()}

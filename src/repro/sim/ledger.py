@@ -74,8 +74,14 @@ def ledger_update(led: Ledger, m: DayMetrics) -> Ledger:
     )
 
 
-def summarize(led: Ledger) -> Dict[str, jnp.ndarray]:
-    """Fleet-level scalars for one rollout; vmap for batched ledgers."""
+def summarize(led: Ledger, initial_backlog=0.0) -> Dict[str, jnp.ndarray]:
+    """Fleet-level scalars for one rollout; vmap for batched ledgers.
+
+    ``initial_backlog``: fleet-total flexible CPU-h queued when the
+    rollout started (sum of the burned-in SimState ``queue``). Served
+    work can legitimately exceed in-horizon arrivals when that backlog
+    drains, so completion is reported as served-of-(arrived + initial
+    backlog) — a true fraction, clipped to 100%."""
     carbon = led.carbon_kg.sum()
     cf_carbon = jnp.clip(led.cf_carbon_kg.sum(), 1e-9, None)
     kwh = led.kwh.sum()
@@ -94,7 +100,7 @@ def summarize(led: Ledger) -> Dict[str, jnp.ndarray]:
         "flex_within_24h_pct": 100.0 * (1.0 - jnp.clip(
             led.unmet.sum() / arrived, 0.0, 1.0)),
         "flex_completion_pct": 100.0 * jnp.clip(
-            led.served.sum() / arrived, 0.0, None),
+            led.served.sum() / (arrived + initial_backlog), 0.0, 1.0),
         "delayed_cpu_h_per_day": led.delayed_cpu_h.sum()
         / jnp.clip(led.days, 1.0, None),
         "mean_intensity_kg_per_kwh": carbon / jnp.clip(kwh, 1e-9, None),

@@ -27,15 +27,26 @@ def state_nbytes(state, batch: int = 1) -> int:
 
 def scenario_rows(ledgers: Ledger, scenario_names: Sequence[str],
                   n_seeds: int, horizon_days: Optional[int] = None,
-                  state_bytes: Optional[int] = None
+                  state_bytes: Optional[int] = None,
+                  initial_backlog=None,
+                  slo_allowance: Optional[float] = None
                   ) -> List[Dict[str, float]]:
     """Per-scenario mean +/- std (over seeds) of the ledger summaries.
 
     ``horizon_days`` (rollout length) and ``state_bytes`` (per-rollout
     carried state size, see ``state_nbytes``) tag every row when given,
     so sweeps record the memory footprint alongside throughput — the
-    axis the streaming prediction layer moves."""
-    summaries = jax.vmap(summarize)(ledgers)        # dict of (B,)
+    axis the streaming prediction layer moves. ``initial_backlog``: (B,)
+    fleet-total queue at rollout start, threaded into
+    ``ledger.summarize`` so flex_completion_pct stays a true fraction
+    when a burned-in backlog drains. ``slo_allowance``: the
+    late-arrival allowance fraction the rollouts' unmet accounting used
+    (SimConfig.slo_allowance), tagged on every row so the table records
+    what the SLO gate was measured against."""
+    if initial_backlog is None:
+        summaries = jax.vmap(summarize)(ledgers)    # dict of (B,)
+    else:
+        summaries = jax.vmap(summarize)(ledgers, initial_backlog)
     rows = []
     for i, name in enumerate(scenario_names):
         sl = slice(i * n_seeds, (i + 1) * n_seeds)
@@ -44,6 +55,8 @@ def scenario_rows(ledgers: Ledger, scenario_names: Sequence[str],
             row["horizon_days"] = int(horizon_days)
         if state_bytes is not None:
             row["state_bytes"] = int(state_bytes)
+        if slo_allowance is not None:
+            row["slo_allowance"] = float(slo_allowance)
         for k, v in summaries.items():
             vals = np.asarray(v[sl], dtype=np.float64)
             row[k] = float(vals.mean())
@@ -113,6 +126,35 @@ def mobility_sweep_rows(led_joint: Ledger, led_seq: Ledger,
     return rows
 
 
+MPC_COLUMNS = ("carbon_saved_pct", "carbon_vs_open_pct",
+               "flex_within_24h_pct", "flex24h_vs_open_pp",
+               "delayed_cpu_h_per_day")
+
+
+def mpc_recourse_rows(led_mpc: Ledger, led_open: Ledger,
+                      scenario_names: Sequence[str], n_seeds: int
+                      ) -> List[Dict[str, float]]:
+    """Rows for the intra-day recourse comparison: ledger summaries of
+    the CLOSED-loop (``SimConfig(mpc=True)``) rollouts plus deltas
+    against the open-loop rollouts of the SAME (scenario x seed) batch.
+    ``carbon_vs_open_pct > 0`` means hourly recourse emitted less carbon
+    than committing to the 00:00 plan; ``flex24h_vs_open_pp`` is the
+    within-24h flex service improvement in percentage points. The MPC
+    acceptance gate (benchmarks/sim_bench.py) requires every
+    forecast-busting row to improve on at least one of the two."""
+    rows = scenario_rows(led_mpc, scenario_names, n_seeds)
+    open_rows = scenario_rows(led_open, scenario_names, n_seeds)
+    for r, q in zip(rows, open_rows):
+        base = max(abs(q["carbon_kg"]), 1e-9)
+        r["carbon_vs_open_pct"] = \
+            100.0 * (q["carbon_kg"] - r["carbon_kg"]) / base
+        r["flex24h_vs_open_pp"] = \
+            r["flex_within_24h_pct"] - q["flex_within_24h_pct"]
+        r["open_carbon_kg"] = q["carbon_kg"]
+        r["open_flex_within_24h_pct"] = q["flex_within_24h_pct"]
+    return rows
+
+
 def risk_sweep_rows(ledgers_by_k: Dict[int, "Ledger"],
                     scenario_names: Sequence[str], n_seeds: int
                     ) -> List[Dict[str, float]]:
@@ -137,6 +179,8 @@ def format_table(rows: List[Dict[str, float]],
     name_w = max([len("scenario")] + [len(r["scenario"]) for r in rows]) + 2
     headers = {"carbon_saved_pct": "carbonSaved%",
                "carbon_vs_sequential_pct": "vsSeq%",
+               "carbon_vs_open_pct": "vsOpen%",
+               "flex24h_vs_open_pp": "flex24hΔpp",
                "peak_reduction_pct": "peakRed%",
                "flex_within_24h_pct": "flex<24h%",
                "flex_completion_pct": "flexDone%",

@@ -121,6 +121,59 @@ class CapacitySqueeze(Perturbation):
         sched["cap_scale"][w] *= self.scale
 
 
+def _hour_channel(sched: Dict[str, np.ndarray], key: str,
+                  days: int) -> np.ndarray:
+    """Lazily materialize an intraday (days, 24) multiplier channel. Kept
+    out of the base schedule so scenarios without intraday perturbations
+    build SimParams with the channel leaves = None (byte-identical
+    compiled day-step graph — stages.SimParams)."""
+    if key not in sched:
+        sched[key] = np.ones((days, 24))
+    return sched[key]
+
+
+@dataclass(frozen=True)
+class IntradayCarbonSpike(Perturbation):
+    """Forecast-busting intra-day carbon spike: the ACTUAL zone intensity
+    is scaled by ``scale`` for a contiguous ``hour_len``-hour block each
+    day of the window, applied after the day-ahead forecast is drawn — the
+    planner never sees it coming. ``hour_start=None`` randomizes the block
+    per day (scenario rng), so the persistence-based carbon forecaster
+    cannot lock onto a recurring pattern across days."""
+    scale: float = 1.8
+    hour_len: int = 8
+    hour_start: Optional[int] = None
+
+    def apply(self, sched, rng, cfg):
+        days = sched["cap_scale"].shape[0]
+        ch = _hour_channel(sched, "carbon_hour_scale", days)
+        w = self.window(days)
+        for d in range(w.start, w.stop):
+            h0 = self.hour_start if self.hour_start is not None \
+                else int(rng.integers(5, 24 - self.hour_len))
+            ch[d, h0:min(h0 + self.hour_len, 24)] *= self.scale
+
+
+@dataclass(frozen=True)
+class IntradayDemandSurge(Perturbation):
+    """Forecast-busting intra-day arrival surge: ACTUAL flexible arrivals
+    scale by ``scale`` for a ``hour_len``-hour block each day of the
+    window (random block per day when ``hour_start=None``). The load
+    forecasters saw none of it when the day's tau was budgeted."""
+    scale: float = 1.7
+    hour_len: int = 6
+    hour_start: Optional[int] = None
+
+    def apply(self, sched, rng, cfg):
+        days = sched["cap_scale"].shape[0]
+        ch = _hour_channel(sched, "arrival_hour_scale", days)
+        w = self.window(days)
+        for d in range(w.start, w.stop):
+            h0 = self.hour_start if self.hour_start is not None \
+                else int(rng.integers(5, 24 - self.hour_len))
+            ch[d, h0:min(h0 + self.hour_len, 24)] *= self.scale
+
+
 # ----------------------------------------------------------------- scenario
 
 @dataclass(frozen=True)
@@ -176,15 +229,33 @@ def build_params(cfg: SimConfig, scenario: Scenario, seed: int, days: int
         cap_scale=jnp.asarray(sched["cap_scale"], f32),
         arrival_scale=jnp.asarray(sched["arrival_scale"], f32),
         campus_scale=jnp.asarray(sched["campus_scale"], f32),
+        arrival_hour_scale=(
+            jnp.asarray(sched["arrival_hour_scale"], f32)
+            if "arrival_hour_scale" in sched else None),
+        carbon_hour_scale=(
+            jnp.asarray(sched["carbon_hour_scale"], f32)
+            if "carbon_hour_scale" in sched else None),
     )
 
 
 def build_batch(cfg: SimConfig, scenarios: Sequence[Scenario],
                 seeds: Sequence[int], days: int) -> SimParams:
     """Stack (scenario x seed) SimParams along a new leading axis, scenario
-    major: batch index b = i_scenario * len(seeds) + i_seed."""
+    major: batch index b = i_scenario * len(seeds) + i_seed.
+
+    Stacking needs a homogeneous pytree: if ANY rollout carries an
+    intraday hour channel, the rollouts without it get the neutral
+    all-ones channel (multiplying actuals by exactly 1.0 — identical
+    results; an all-None column stays None and the batch keeps the
+    channel-free graph)."""
     all_params = [build_params(cfg, sc, seed, days)
                   for sc in scenarios for seed in seeds]
+    ones = jnp.ones((days, 24), f32)
+    for field in ("arrival_hour_scale", "carbon_hour_scale"):
+        if any(getattr(p, field) is not None for p in all_params):
+            all_params = [
+                p._replace(**{field: ones}) if getattr(p, field) is None
+                else p for p in all_params]
     return jax.tree.map(lambda *xs: jnp.stack(xs), *all_params)
 
 
@@ -265,6 +336,31 @@ def mobility_sweep_library(days: int = 14,
                   CapacitySqueeze(scale=0.75)),
                  lambda_e=1.0, lambda_p=0.02, mobility=m)
         for m in mobilities
+    ]
+
+
+def forecast_bust_library(days: int = 6) -> List[Scenario]:
+    """Forecast-busting scenarios for the intra-day MPC recourse gate
+    (``SimConfig.mpc``): the day-ahead plan is issued against clean
+    forecasts, then the ACTUAL intensity / arrivals are hit by
+    randomly-placed intra-day blocks the planner never saw. These are the
+    rows where the closed loop must beat (or match) the open loop on
+    carbon or unmet-flex — ``report.mpc_recourse_rows`` /
+    ``benchmarks/sim_bench.py`` gate on every row."""
+    return [
+        Scenario("intraday_carbon_spike",
+                 "unforecasted x1.8 intensity block, 8h/day, random hours",
+                 (IntradayCarbonSpike(scale=1.8, hour_len=8),),
+                 lambda_e=1.0),
+        Scenario("intraday_demand_surge",
+                 "unforecasted x1.7 arrival block, 6h/day, random hours",
+                 (IntradayDemandSurge(scale=1.7, hour_len=6),),
+                 lambda_e=1.0),
+        Scenario("intraday_perfect_storm",
+                 "carbon spike + arrival surge, independently placed",
+                 (IntradayCarbonSpike(scale=1.6, hour_len=8),
+                  IntradayDemandSurge(scale=1.5, hour_len=6)),
+                 lambda_e=1.0),
     ]
 
 

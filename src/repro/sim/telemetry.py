@@ -116,10 +116,15 @@ class DayTelemetry(NamedTuple):
     queue_age_days: jnp.ndarray       # (n,) backlog / daily service rate
     paused: jnp.ndarray               # (n,) 1.0 = SLO pause active
     shaped: jnp.ndarray               # (n,) 1.0 = cluster actively shaped
+    # --- intra-day MPC recourse (core.mpc; zeros when StageConfig.mpc
+    # is off so the telemetry pytree stays config-independent)
+    mpc_recourse_frac: jnp.ndarray    # (n,) frac hours re-planned
+    mpc_recourse_depth: jnp.ndarray   # (n,) mean |delta change| if re-planned
 
 
 def day_telemetry(sdiag: Dict[str, jnp.ndarray], fc, res, u_if, vcc_curve,
-                  *, pause_left, shaped, trail) -> DayTelemetry:
+                  *, pause_left, shaped, trail,
+                  recourse=None) -> DayTelemetry:
     """Assemble the day's DayTelemetry inside the jitted step.
 
     ``sdiag``: the optimize_stage solver-diagnostics dict; ``fc``: the
@@ -127,9 +132,19 @@ def day_telemetry(sdiag: Dict[str, jnp.ndarray], fc, res, u_if, vcc_curve,
     admission DayResult; ``u_if``: realized inflexible load (n, 24);
     ``trail``: dict of trailing-week daily levels {uif, tuf, tr} (n, 7)
     — the pred rings in streaming mode, the hist window tails in rescan
-    mode. Barrier-pinned: telemetry must never change how the channels
-    it taps re-fuse."""
+    mode; ``recourse``: the ``core.mpc.MPCDiag`` of the day when
+    StageConfig.mpc (None = open loop, recorded as zeros).
+    Barrier-pinned: telemetry must never change how the channels it taps
+    re-fuse. Note ``vcc_curve`` is the curve admission actually enforced
+    (under mpc the realized hour-by-hour curve), so ``vcc_binding_frac``
+    gauges the closed loop, not the stale 00:00 plan."""
     daily_res = hour_sum(res.reservations)
+    if recourse is None:
+        rec_frac = jnp.zeros_like(daily_res)
+        rec_depth = jnp.zeros_like(daily_res)
+    else:
+        rec_frac = recourse.recourse_frac
+        rec_depth = recourse.recourse_depth
     drift = jnp.maximum(
         jnp.maximum(level_drift(hour_sum(fc["uif"]), trail["uif"]),
                     level_drift(fc["tuf"], trail["tuf"])),
@@ -156,7 +171,9 @@ def day_telemetry(sdiag: Dict[str, jnp.ndarray], fc, res, u_if, vcc_curve,
         vcc_binding_frac=coverage(res.reservations, 0.999 * vcc_curve),
         queue_age_days=res.queue_end / jnp.clip(res.served, 1e-6, None),
         paused=(pause_left > 0).astype(f32),
-        shaped=shaped.astype(f32))
+        shaped=shaped.astype(f32),
+        mpc_recourse_frac=rec_frac,
+        mpc_recourse_depth=rec_depth)
     return jax.lax.optimization_barrier(rec)
 
 
@@ -172,6 +189,7 @@ TRACE_FIELDS = (
     "uif_mape", "uif_bias", "tuf_mape", "tuf_bias", "tr_mape", "tr_bias",
     "theta_coverage", "uifq_coverage", "fc_level_drift",
     "vcc_binding_frac", "queue_age_max", "paused_frac", "shaped_frac",
+    "mpc_recourse_frac", "mpc_recourse_depth",
 )
 
 
@@ -217,6 +235,10 @@ def telemetry_records(tel: DayTelemetry, scenario_names: Sequence[str],
                 "queue_age_max": float(t.queue_age_days[b, d].max()),
                 "paused_frac": float(t.paused[b, d].mean()),
                 "shaped_frac": float(t.shaped[b, d].mean()),
+                "mpc_recourse_frac": float(
+                    t.mpc_recourse_frac[b, d].mean()),
+                "mpc_recourse_depth": float(
+                    t.mpc_recourse_depth[b, d].mean()),
             })
     return records
 

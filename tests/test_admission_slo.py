@@ -70,16 +70,44 @@ def test_slo_two_day_trigger_and_pause():
     res_demand = jnp.asarray([101.0, 50.0])
     budget = jnp.asarray([100.0, 100.0])
     unmet = jnp.zeros((2,))
-    st, allowed = slo.update(st, cfg, res_demand, budget, unmet)
+    arrived = jnp.full((2,), 10.0)
+    st, allowed = slo.update(st, cfg, res_demand, budget, unmet, arrived)
     assert bool(allowed[0]) and bool(allowed[1])     # 1 crowded day: fine
-    st, allowed = slo.update(st, cfg, res_demand, budget, unmet)
+    st, allowed = slo.update(st, cfg, res_demand, budget, unmet, arrived)
     assert not bool(allowed[0])                      # 2 in a row: paused
     assert bool(allowed[1])
     for _ in range(6):
-        st, allowed = slo.update(st, cfg, jnp.zeros((2,)), budget, unmet)
+        st, allowed = slo.update(st, cfg, jnp.zeros((2,)), budget, unmet,
+                                 arrived)
         assert not bool(allowed[0])
-    st, allowed = slo.update(st, cfg, jnp.zeros((2,)), budget, unmet)
+    st, allowed = slo.update(st, cfg, jnp.zeros((2,)), budget, unmet,
+                             arrived)
     assert bool(allowed[0])                          # pause expired
+
+
+def test_slo_persistently_crowded_resumes_after_exactly_pause_days():
+    """Regression: the crowded streak must FREEZE while a pause is
+    active. The old code kept accumulating crowded days during the
+    pause, so a persistently busy cluster re-triggered a fresh pause the
+    moment the old one expired and never resumed shaping."""
+    cfg = slo.SLOConfig(pause_days=3)
+    st = slo.init_state(1)
+    crowded = jnp.asarray([150.0])
+    budget = jnp.asarray([100.0])
+    unmet = jnp.zeros((1,))
+    arrived = jnp.ones((1,))
+    allowed_hist = []
+    for _ in range(12):                 # crowded EVERY day
+        st, allowed = slo.update(st, cfg, crowded, budget, unmet, arrived)
+        allowed_hist.append(bool(allowed[0]))
+    # day1: streak 1 (allowed). day2: trigger -> 3 disallowed days
+    # (days 2-4). day5: pause expired -> shaping resumes for one day.
+    # days 6-7 rebuild the streak, day 7 re-triggers, and so on.
+    assert allowed_hist[:8] == [True, False, False, False,
+                                True, True, False, False]
+    # shaping must resume at least once after the first pause
+    paused_days = allowed_hist[1:].index(True)
+    assert paused_days == cfg.pause_days            # exactly pause_days
 
 
 def test_violation_rate_accounting():
@@ -87,5 +115,42 @@ def test_violation_rate_accounting():
     st = slo.init_state(1)
     for i in range(10):
         unmet = jnp.asarray([1.0 if i < 3 else 0.0])
-        st, _ = slo.update(st, cfg, jnp.zeros((1,)), jnp.ones((1,)), unmet)
+        st, _ = slo.update(st, cfg, jnp.zeros((1,)), jnp.ones((1,)), unmet,
+                           jnp.ones((1,)))
     assert abs(float(slo.violation_rate(st)[0]) - 0.3) < 1e-6
+
+
+def test_violation_threshold_scale_invariant():
+    """Regression: a day is violated when unmet exceeds rel_tol x
+    arrivals — the detector must fire identically on a 10-CPU-h synthetic
+    cluster and a 10k-CPU-h production one (the old absolute
+    ``unmet > 0.1`` threshold flagged every large cluster and no small
+    one)."""
+    cfg = slo.SLOConfig(rel_tol=1e-3)
+    for scale in (1.0, 1e4):
+        arrived = jnp.asarray([scale, scale])
+        # cluster 0: unmet = 2e-3 of arrivals (violated);
+        # cluster 1: unmet = 5e-4 of arrivals (within tolerance)
+        unmet = jnp.asarray([2e-3 * scale, 5e-4 * scale])
+        st = slo.init_state(2)
+        st, _ = slo.update(st, cfg, jnp.zeros((2,)), jnp.ones((2,)),
+                           unmet, arrived)
+        assert st["violation_days"].tolist() == [1, 0], f"scale={scale}"
+
+
+def test_allowance_frac_threaded_through_run_day():
+    """The late-arrival allowance is a parameter, not a buried constant:
+    unmet = max(queue growth - allowance_frac * arrivals, 0)."""
+    n = 1
+    vcc = jnp.zeros((n, 24))            # nothing served: all flex queues
+    u_if = jnp.zeros((n, 24))
+    arrivals = jnp.full((n, 24), 1.0)   # 24 CPU-h arrive, 0 served
+    args = (vcc, u_if, arrivals, jnp.full((n, 24), 1.2),
+            jnp.full((n,), 10.0), jnp.zeros((n,)), _power_fn,
+            jnp.full((n, 24), 0.3))
+    res_default = admission.run_day(*args)
+    res_half = admission.run_day(*args, allowance_frac=0.5)
+    np.testing.assert_allclose(float(res_default.unmet[0]),
+                               (1.0 - 0.25) * 24.0, rtol=1e-6)
+    np.testing.assert_allclose(float(res_half.unmet[0]),
+                               (1.0 - 0.5) * 24.0, rtol=1e-6)

@@ -95,6 +95,35 @@ def test_ledger_matches_hand_computed_2cluster_2day():
                - 100.0 * (1 - unmet / arrived)) < 1e-4
 
 
+def test_flex_completion_capped_with_initial_backlog():
+    """Regression: when a burned-in backlog drains during the rollout,
+    served work exceeds in-horizon arrivals. Completion must be reported
+    as served-of-(arrived + initial backlog) and never exceed 100%."""
+    n = 2
+    led = init_ledger(n)
+    z = jnp.zeros((n,), jnp.float32)
+    m = DayMetrics(
+        carbon_kg=jnp.ones((n,)), kwh=jnp.ones((n,)),
+        peak_kw=jnp.ones((n,)),
+        served=jnp.asarray([15.0, 12.0]),    # > arrived: backlog drained
+        arrived=jnp.asarray([10.0, 10.0]),
+        unmet=z, queue_end=z,
+        cf_carbon_kg=jnp.ones((n,)), cf_kwh=jnp.ones((n,)),
+        cf_peak_kw=jnp.ones((n,)),
+        cf_served=jnp.asarray([15.0, 12.0]), cf_queue_end=z)
+    led = ledger_update(led, m)
+    # without the backlog term the ratio is 27/20 -> clipped to 100
+    assert float(summarize(led)["flex_completion_pct"]) == 100.0
+    # with the true initial backlog (7 CPU-h) it is exactly 100
+    s = summarize(led, initial_backlog=7.0)
+    np.testing.assert_allclose(float(s["flex_completion_pct"]), 100.0,
+                               rtol=1e-6)
+    # an over-estimated backlog yields a true fraction below 100
+    s = summarize(led, initial_backlog=13.0)
+    np.testing.assert_allclose(float(s["flex_completion_pct"]),
+                               100.0 * 27.0 / 33.0, rtol=1e-6)
+
+
 def test_vmap_batch_matches_sequential_runs():
     """A vmap'd batch of 4 scenarios must reproduce 4 separate
     (non-batched, day-sequential) rollouts BITWISE — the engine's parity
